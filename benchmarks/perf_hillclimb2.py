@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb — round 2 (after the round-1 lessons).
+
+Code change since round 1: sdpa now einsums on the native (B,S,KV,hd)
+layout with f32 accumulation — no transposed/upcast K-V copies.
+Round-2 hypotheses below; results → results/hillclimb2.json.
+"""
+
+import json
+import time
+import traceback
+
+from repro.launch.dryrun import analyze_cell
+
+CLIMBS = [
+    ("qwen1.5-110b", "decode_32k", False, [
+        ("native_sdpa",
+         "no f32/transposed cache copies ⇒ memory −~2x vs round-1 baseline "
+         "(2762ms)", {}, {}),
+        ("native_seqshard",
+         "plus L-sharded cache: round-1 showed seq-shard kills the "
+         "replication collectives (2205→368ms); with copies gone memory "
+         "should now DROP too", {}, {"cache_seq_shard": True}),
+    ]),
+    ("deepseek-v2-236b", "train_4k", False, [
+        ("accum8_nodots",
+         "8 microbatches at full remat: dispatch buffers + residual set "
+         "halve ⇒ memory −~25%, collective +~15% (2x weight regathers)",
+         {"accum_steps": 8}, {}),
+    ]),
+    ("llama4-maverick-400b-a17b", "train_4k", True, [
+        ("accum1",
+         "single macrobatch: FSDP weight gathers once per step ⇒ "
+         "collective −~2x vs accum2 (24.9s), temp ×~2",
+         {"accum_steps": 1}, {}),
+    ]),
+    ("deepseek-v2-236b", "decode_32k", False, [
+        ("absorbed_seqshard_native",
+         "round-1 best (1049ms mem / 1248ms coll) + native sdpa on the "
+         "rope-score path ⇒ both terms −", {"mla_absorbed": True},
+         {"cache_seq_shard": True}),
+    ]),
+]
+
+
+def main():
+    out = []
+    for arch, shape, multi_pod, variants in CLIMBS:
+        for name, hypothesis, extra_cfg, variant in variants:
+            t0 = time.time()
+            try:
+                rec = analyze_cell(arch, shape, multi_pod=multi_pod,
+                                   extra_cfg=extra_cfg, variant=variant)
+                rec["climb_variant"] = name
+                rec["hypothesis"] = hypothesis
+                out.append(rec)
+                print(f"== {arch} × {shape} [{name}]: "
+                      f"comp={rec['compute_s']*1e3:.1f}ms "
+                      f"mem={rec['memory_s']*1e3:.1f}ms "
+                      f"coll={rec['collective_s']*1e3:.1f}ms "
+                      f"temp={rec['memory_analysis']['temp_bytes']/2**30:.1f}"
+                      f"GiB ({time.time()-t0:.0f}s)", flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                out.append({"arch": arch, "shape": shape,
+                            "climb_variant": name, "error": repr(e)})
+    path = os.path.join(os.path.dirname(__file__), "results",
+                        "hillclimb2.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

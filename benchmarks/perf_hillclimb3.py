@@ -1,0 +1,54 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb — round 3: interleaved RoPE (shard-local rotation).
+
+Code change: apply_rope now rotates adjacent pairs instead of rotate-half,
+so the rotation never crosses hd shards.  Hypothesis: the 'involuntary full
+rematerialization' SPMD fallbacks on the decode path disappear ⇒ qwen
+decode memory AND collective both drop ~2x+.
+"""
+
+import json, time, traceback
+from repro.launch.dryrun import analyze_cell
+
+CLIMBS = [
+    ("qwen1.5-110b", "decode_32k", False, [
+        ("ileave_rope", "shard-local rope kills cache replication", {}, {}),
+        ("ileave_rope_seqshard", "plus L-sharded cache", {},
+         {"cache_seq_shard": True}),
+    ]),
+    ("qwen1.5-110b", "train_4k", False, [
+        ("ileave_rope_train", "same fix on the train path (rope on q,k at "
+         "S=4096): fewer reshard copies", {}, {}),
+    ]),
+    ("llama4-maverick-400b-a17b", "decode_32k", False, [
+        ("ileave_rope", "llama4 decode was collective-bound (3.08s) via the "
+         "same replication", {}, {}),
+    ]),
+]
+
+out = []
+for arch, shape, multi_pod, variants in CLIMBS:
+    for name, hypothesis, extra_cfg, variant in variants:
+        t0 = time.time()
+        try:
+            rec = analyze_cell(arch, shape, multi_pod=multi_pod,
+                               extra_cfg=extra_cfg, variant=variant)
+            rec["climb_variant"] = name
+            rec["hypothesis"] = hypothesis
+            out.append(rec)
+            print(f"== {arch} × {shape} [{name}]: "
+                  f"comp={rec['compute_s']*1e3:.1f}ms "
+                  f"mem={rec['memory_s']*1e3:.1f}ms "
+                  f"coll={rec['collective_s']*1e3:.1f}ms "
+                  f"temp={rec['memory_analysis']['temp_bytes']/2**30:.1f}GiB "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            out.append({"arch": arch, "shape": shape,
+                        "climb_variant": name, "error": repr(e)})
+with open(os.path.join(os.path.dirname(__file__), "results",
+                       "hillclimb3.json"), "w") as f:
+    json.dump(out, f, indent=1)
+print("wrote hillclimb3.json")

@@ -1,0 +1,55 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb — round 4: jnp flash-decode (online softmax over key
+blocks; scores never materialize at full cache length).
+
+Hypothesis: qwen decode memory term is dominated by (B,32k,KV,G) f32
+scores/probs traffic (~537MB × 80 layers × several softmax-chain passes,
+per-op decomposition in EXPERIMENTS §Perf).  flash-decode caps live scores
+at (B,block,KV,G) ⇒ memory −~5x; collective: the replicated-scores copies
+die too.
+"""
+
+import json, time, traceback
+from repro.launch.dryrun import analyze_cell
+
+CLIMBS = [
+    ("qwen1.5-110b", "decode_32k", False, [
+        ("flash_decode", "scores traffic collapses; memory 2.76s -> <1s",
+         {}, {}),
+        ("flash_decode_seqshard", "plus L-sharded cache: reads /16",
+         {}, {"cache_seq_shard": True}),
+    ]),
+    ("llama4-maverick-400b-a17b", "decode_32k", False, [
+        ("flash_decode", "collective-bound decode (3.08s): replicated "
+         "scores copies die", {}, {}),
+    ]),
+    ("gemma2-27b", "long_500k", False, [
+        ("flash_decode", "500k global-layer cache walks in blocks", {}, {}),
+    ]),
+]
+
+out = []
+for arch, shape, multi_pod, variants in CLIMBS:
+    for name, hypothesis, extra_cfg, variant in variants:
+        t0 = time.time()
+        try:
+            rec = analyze_cell(arch, shape, multi_pod=multi_pod,
+                               extra_cfg=extra_cfg, variant=variant)
+            rec["climb_variant"] = name; rec["hypothesis"] = hypothesis
+            out.append(rec)
+            print(f"== {arch} × {shape} [{name}]: "
+                  f"comp={rec['compute_s']*1e3:.1f}ms "
+                  f"mem={rec['memory_s']*1e3:.1f}ms "
+                  f"coll={rec['collective_s']*1e3:.1f}ms "
+                  f"args={rec['memory_analysis']['argument_bytes']/2**30:.1f}GiB "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            out.append({"arch": arch, "shape": shape,
+                        "climb_variant": name, "error": repr(e)})
+with open(os.path.join(os.path.dirname(__file__), "results",
+                       "hillclimb4.json"), "w") as f:
+    json.dump(out, f, indent=1)
+print("wrote hillclimb4.json")

@@ -1,0 +1,53 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf round 6 — ring-buffered local caches for the long-context cells.
+
+gemma2/llama4 long_500k allocate FULL 524288-token caches for their LOCAL
+attention layers (window 4096/8192).  `windowed_local_cache=True` switches
+those layers to ring buffers of window size.  Hypothesis: cache argument
+bytes drop ~(L/window)× on the local layers ⇒ decode working set and
+memory term both shrink; global layers unchanged.
+"""
+
+import json, time, traceback
+from repro.launch.dryrun import analyze_cell
+
+CLIMBS = [
+    ("gemma2-27b", "long_500k", [
+        ("baseline", {}, {}),
+        ("windowed_cache", {"windowed_local_cache": True}, {}),
+    ]),
+    ("llama4-maverick-400b-a17b", "long_500k", [
+        ("baseline", {}, {}),
+        ("windowed_cache", {"windowed_local_cache": True}, {}),
+    ]),
+    ("gemma2-27b", "decode_32k", [
+        ("baseline", {}, {}),
+        ("windowed_cache", {"windowed_local_cache": True}, {}),
+    ]),
+]
+
+out = []
+for arch, shape, variants in CLIMBS:
+    for name, extra_cfg, variant in variants:
+        t0 = time.time()
+        try:
+            rec = analyze_cell(arch, shape, extra_cfg=extra_cfg,
+                               variant=variant)
+            rec["climb_variant"] = name
+            out.append(rec)
+            ma = rec["memory_analysis"]
+            print(f"== {arch} × {shape} [{name}]: "
+                  f"mem={rec['memory_s']*1e3:.1f}ms "
+                  f"coll={rec['collective_s']*1e3:.1f}ms "
+                  f"args={ma['argument_bytes']/2**30:.2f}GiB "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            out.append({"arch": arch, "shape": shape,
+                        "climb_variant": name, "error": repr(e)})
+with open(os.path.join(os.path.dirname(__file__), "results",
+                       "hillclimb_windowed.json"), "w") as f:
+    json.dump(out, f, indent=1)
+print("wrote hillclimb_windowed.json")

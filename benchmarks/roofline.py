@@ -1,0 +1,73 @@
+"""§Roofline table builder — reads the dry-run JSONs and emits markdown.
+
+Terms (per chip, TPU v5e): compute = FLOPs/197e12, memory = HBM bytes/819e9,
+collective = collective result-bytes/50e9.  The dominant term is the
+bottleneck; roofline fraction = useful MODEL_FLOPS time / dominant term.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+PEAK = 197e12
+
+
+def load(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)["results"]
+
+
+HBM_BW = 819e9
+
+
+def roofline_fraction(r: Dict) -> float:
+    """Useful-work time / dominant-term time.
+
+    train/prefill: useful = MODEL_FLOPS at peak (MFU-style).
+    decode: the step is intrinsically memory-bound — useful work is reading
+    the param+cache working set once (= per-device argument bytes)."""
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    dom = max(terms.values())
+    if r["kind"] == "decode":
+        useful_s = r["memory_analysis"]["argument_bytes"] / HBM_BW
+    else:
+        useful_s = r["model_flops_global"] / r["chips"] / PEAK
+    return useful_s / max(dom, 1e-30)
+
+
+def fmt_row(r: Dict) -> str:
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    dom = max(terms, key=terms.get)
+    frac = roofline_fraction(r)
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s'] * 1e3:.2f} | {r['memory_s'] * 1e3:.2f} "
+            f"| {r['collective_s'] * 1e3:.2f} | {dom} "
+            f"| {r['useful_flop_ratio']:.2f} | {frac * 100:.1f}% |")
+
+
+def table(paths: List[str]) -> str:
+    rows = []
+    for p in paths:
+        if os.path.exists(p):
+            rows.extend(load(p))
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = ["| arch | shape | mesh | compute ms | memory ms | collective ms "
+           "| bottleneck | MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    out.extend(fmt_row(r) for r in rows)
+    return "\n".join(out)
+
+
+def main():
+    paths = [os.path.join(RESULTS, "dryrun_single_pod.json"),
+             os.path.join(RESULTS, "dryrun_multi_pod.json")]
+    print(table(paths))
+
+
+if __name__ == "__main__":
+    main()

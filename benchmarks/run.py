@@ -1,0 +1,46 @@
+"""Benchmark suite entrypoint: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The dry-run/roofline cells
+(which need the 512-device env flag) run via ``repro.launch.dryrun`` as a
+separate process — see EXPERIMENTS.md §Dry-run.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_reddit, bench_pagerank, bench_linear_algebra,
+                   bench_tpch, bench_overhead, bench_drl_training,
+                   bench_history, bench_kernels)
+    suites = [
+        ("reddit(Fig5,Tab3)", bench_reddit.main),
+        ("pagerank(Fig6)", bench_pagerank.main),
+        ("linear_algebra(Fig7-9)", bench_linear_algebra.main),
+        ("tpch(Fig10)", bench_tpch.main),
+        ("overhead(Tab2,Fig11)", bench_overhead.main),
+        ("drl_training(Fig12)", bench_drl_training.main),
+        ("history(Fig13)", bench_history.main),
+        ("kernels(Pallas)", bench_kernels.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

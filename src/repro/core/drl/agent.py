@@ -1,0 +1,104 @@
+"""A3C-style advantage actor-critic agent (paper §3.1.3).
+
+Update rule (paper):
+    θ ← θ + α ∇θ log πθ(s,a) A(s,a) + β ∇θ H(π(·|s))
+with A(s,a) = R - V(s) from the critic, entropy bonus β for exploration.
+
+The paper runs the agent as a TensorFlow server process; here it is a pure
+JAX module — the "server" boundary is preserved by the advisor calling only
+``select`` / ``observe`` / ``train_batch``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...optimizer.adamw import AdamW
+from . import networks
+
+
+class Transition(NamedTuple):
+    state: np.ndarray
+    action: int
+    reward: float
+    mask: np.ndarray
+
+
+@dataclass
+class A3CConfig:
+    state_dim: int
+    num_actions: int
+    lr: float = 3e-4
+    gamma: float = 0.9
+    entropy_beta: float = 0.05
+    value_coef: float = 0.5
+    seed: int = 0
+
+
+class A3CAgent:
+    def __init__(self, cfg: A3CConfig):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = networks.init_actor_critic(key, cfg.state_dim,
+                                                 cfg.num_actions)
+        self.opt = AdamW(lr=cfg.lr, weight_decay=0.0, grad_clip_norm=5.0)
+        self.opt_state = self.opt.init(self.params)
+        self._rng = np.random.default_rng(cfg.seed)
+        self._update = jax.jit(self._update_impl)
+
+    # -- acting ------------------------------------------------------------------
+    def select(self, state: np.ndarray, mask: Optional[np.ndarray] = None,
+               greedy: bool = False) -> int:
+        mask_arr = (jnp.asarray(mask, bool) if mask is not None
+                    else jnp.ones((self.cfg.num_actions,), bool))
+        probs = np.asarray(networks.policy(self.params, jnp.asarray(state),
+                                           mask_arr))
+        probs = probs / probs.sum()
+        if greedy:
+            return int(np.argmax(probs))
+        return int(self._rng.choice(len(probs), p=probs))
+
+    # -- learning -----------------------------------------------------------------
+    def _update_impl(self, params, opt_state, states, actions, returns, masks):
+        def loss_fn(p):
+            logits = networks.policy_logits(p, states, masks)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            probs = jnp.exp(logp)
+            v = networks.value(p, states)
+            adv = returns - v
+            pg = -jnp.mean(logp[jnp.arange(actions.shape[0]), actions]
+                           * jax.lax.stop_gradient(adv))
+            ent = -jnp.mean(jnp.sum(jnp.where(masks, probs * logp, 0.0),
+                                    axis=-1))
+            vloss = jnp.mean(jnp.square(adv))
+            total = pg + self.cfg.value_coef * vloss - self.cfg.entropy_beta * ent
+            return total, (pg, vloss, ent)
+
+        (total, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt_state = self.opt.update(grads, opt_state, params)
+        return new_params, new_opt_state, total, aux
+
+    def train_batch(self, batch: List[Transition]) -> Tuple[float, dict]:
+        """One gradient step on a batch of transitions.  Rewards here are the
+        immediate rewards of one-shot partitioning decisions; with γ we fold
+        in the discounted future return within an episode trace."""
+        states = jnp.asarray(np.stack([t.state for t in batch]))
+        actions = jnp.asarray(np.array([t.action for t in batch], np.int32))
+        masks = jnp.asarray(np.stack([t.mask for t in batch]))
+        # discounted returns per-episode suffix (batch arrives episode-ordered)
+        returns = np.zeros(len(batch), np.float32)
+        run = 0.0
+        for i in reversed(range(len(batch))):
+            run = batch[i].reward + self.cfg.gamma * run
+            returns[i] = run
+        self.params, self.opt_state, total, (pg, vl, ent) = self._update(
+            self.params, self.opt_state, states, actions,
+            jnp.asarray(returns), masks)
+        return float(total), {"policy_loss": float(pg),
+                              "value_loss": float(vl),
+                              "entropy": float(ent)}

@@ -1,0 +1,55 @@
+"""Actor-critic networks (paper §3.1.3, §5.4), pure JAX.
+
+Both nets are 3-layer MLPs: hidden 128 → 64, leaky-relu activations; the
+actor head is a masked softmax over the candidate slots, the critic head is
+linear (scalar value) — exactly the architecture reported in §5.4.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+HIDDEN = (128, 64)
+
+
+def init_mlp(key: jax.Array, sizes: List[int]) -> List[Dict[str, jax.Array]]:
+    params = []
+    for i, (din, dout) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+        params.append({"w": w, "b": jnp.zeros((dout,), jnp.float32)})
+    return params
+
+
+def mlp_forward(params, x, final_linear: bool = True):
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1 or not final_linear:
+            h = jax.nn.leaky_relu(h, negative_slope=0.01)
+    return h
+
+
+def init_actor_critic(key: jax.Array, state_dim: int, num_actions: int):
+    ka, kc = jax.random.split(key)
+    actor = init_mlp(ka, [state_dim, *HIDDEN, num_actions])
+    critic = init_mlp(kc, [state_dim, *HIDDEN, 1])
+    return {"actor": actor, "critic": critic}
+
+
+def policy_logits(params, state, action_mask=None):
+    logits = mlp_forward(params["actor"], state)
+    if action_mask is not None:
+        logits = jnp.where(action_mask, logits, -1e9)
+    return logits
+
+
+def policy(params, state, action_mask=None):
+    return jax.nn.softmax(policy_logits(params, state, action_mask), axis=-1)
+
+
+def value(params, state):
+    return mlp_forward(params["critic"], state)[..., 0]

@@ -1,0 +1,148 @@
+"""Historical workflow analyzer (paper §3.1.1, §4.2).
+
+Reconstructs the low-level workflow graph from execution logs (node =
+(app_id, timestamp) execution, edge = dataset produced by src and consumed
+by dst), condenses it into a *skeleton graph* by merging executions whose IR
+signatures are equal, and answers the workload-enumeration query: given a
+producer about to write a dataset, which historical workloads will likely
+consume it?
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .ir import IRGraph
+
+
+@dataclass
+class ExecutionRecord:
+    """One execution of a workload (one node of the low-level graph)."""
+    app_id: str
+    timestamp: float
+    ir_signature: str
+    inputs: List[str] = field(default_factory=list)    # dataset ids read
+    outputs: List[str] = field(default_factory=list)   # dataset ids written
+    latency: float = 0.0                               # seconds
+    input_bytes: float = 0.0
+    output_bytes: float = 0.0
+    # per-candidate runtime stats observed in this run, keyed by candidate
+    # signature: {"selectivity": float, "distinct_keys": float,
+    #             "key_bytes": float, "object_bytes": float}
+    candidate_stats: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+
+@dataclass
+class SkeletonNode:
+    """A group of executions sharing one IR signature (Fig. 3b)."""
+    group_id: int
+    ir_signature: str
+    runs: List[ExecutionRecord] = field(default_factory=list)
+
+    @property
+    def app_ids(self) -> Set[str]:
+        return {r.app_id for r in self.runs}
+
+
+class HistoryStore:
+    """Append-only execution log + derived graphs.
+
+    The store optionally persists to a JSONL file so history survives process
+    restarts (the paper's write-once/read-many premise needs durability).
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.records: List[ExecutionRecord] = []
+        self.irs: Dict[str, IRGraph] = {}          # ir_signature -> IR graph
+        self.path = path
+        if path and os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    self.records.append(ExecutionRecord(**json.loads(line)))
+
+    # -- logging ----------------------------------------------------------------
+    def log(self, record: ExecutionRecord, ir: Optional[IRGraph] = None) -> None:
+        self.records.append(record)
+        if ir is not None:
+            self.irs[record.ir_signature] = ir
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(asdict(record)) + "\n")
+
+    def log_workload(self, workload, *, timestamp: float, latency: float = 0.0,
+                     input_bytes: float = 0.0, output_bytes: float = 0.0,
+                     candidate_stats: Optional[Dict] = None) -> ExecutionRecord:
+        g = workload.graph
+        rec = ExecutionRecord(
+            app_id=workload.app_id, timestamp=timestamp,
+            ir_signature=g.graph_signature(),
+            inputs=[g.nodes[s].params["dataset"] for s in g.scans],
+            outputs=[g.nodes[o].params["dataset"] for o in g.writes],
+            latency=latency, input_bytes=input_bytes,
+            output_bytes=output_bytes,
+            candidate_stats=candidate_stats or {})
+        self.log(rec, ir=g)
+        return rec
+
+    # -- low-level workflow graph (Fig. 3a) -----------------------------------------
+    def low_level_graph(self) -> List[Tuple[int, int, str]]:
+        """Edges (producer_idx, consumer_idx, dataset) between executions."""
+        edges = []
+        producers: Dict[str, List[int]] = {}
+        for i, r in enumerate(self.records):
+            for d in r.outputs:
+                producers.setdefault(d, []).append(i)
+        for j, r in enumerate(self.records):
+            for d in r.inputs:
+                for i in producers.get(d, []):
+                    # producer must precede the consumer
+                    if self.records[i].timestamp <= r.timestamp and i != j:
+                        edges.append((i, j, d))
+        return edges
+
+    # -- skeleton graph (Fig. 3b) -----------------------------------------------------
+    def skeleton_graph(self) -> Tuple[Dict[str, SkeletonNode],
+                                      Set[Tuple[str, str]]]:
+        groups: Dict[str, SkeletonNode] = {}
+        for r in self.records:
+            if r.ir_signature not in groups:
+                groups[r.ir_signature] = SkeletonNode(len(groups), r.ir_signature)
+            groups[r.ir_signature].runs.append(r)
+        edges: Set[Tuple[str, str]] = set()
+        idx = {i: r.ir_signature for i, r in enumerate(self.records)}
+        for i, j, _d in self.low_level_graph():
+            edges.add((idx[i], idx[j]))
+        return groups, edges
+
+    # -- workload enumeration (§3.1.1) ---------------------------------------------------
+    def enumerate_consumers(self, producer_signature: str) -> List[SkeletonNode]:
+        """Workloads W that historically consumed outputs of executions whose
+        IR signature matches the producer's — the future-consumer prediction."""
+        groups, edges = self.skeleton_graph()
+        if producer_signature not in groups:
+            return []
+        out = [groups[dst] for (src, dst) in edges
+               if src == producer_signature and dst in groups]
+        # dedupe, stable order by group id
+        seen, uniq = set(), []
+        for g in out:
+            if g.group_id not in seen:
+                seen.add(g.group_id)
+                uniq.append(g)
+        return sorted(uniq, key=lambda g: g.group_id)
+
+    def ir_of(self, signature: str) -> Optional[IRGraph]:
+        return self.irs.get(signature)
+
+    # -- simple aggregates used by features.py ----------------------------------------------
+    def runs_of_group(self, signature: str) -> List[ExecutionRecord]:
+        return [r for r in self.records if r.ir_signature == signature]
+
+    def overall_throughput(self) -> float:
+        """Baseline throughput (bytes/s) over all history — reward denominator."""
+        total_bytes = sum(r.input_bytes for r in self.records)
+        total_lat = sum(r.latency for r in self.records)
+        return total_bytes / total_lat if total_lat > 0 else 0.0

@@ -1,0 +1,90 @@
+"""Sharding advisor — Lachesis's selection loop applied to TPU shardings.
+
+Beyond-paper extension (DESIGN §2): for an LM step function, the
+"partitioner candidates" are sharding variants (config + spec knobs), the
+"historical statistics" are the roofline terms derived from each variant's
+compiled artifact, and the selector is Eq. 2's argmin over the dominant
+term.  This is exactly the §Perf hillclimb, packaged as an advisor: give it
+a cell and a candidate list, it lowers each, scores it, and returns the
+winner with the full measurement trail (so the decision is auditable the
+same way PartitioningDecision is).
+
+The candidate space mirrors the knobs the paper's action space would hold:
+    extra_cfg: accum_steps, remat_policy, mla_absorbed, ...
+    variant:   cache_seq_shard, fsdp_params, flash_decode
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class ShardingCandidate:
+    name: str
+    extra_cfg: Dict[str, Any] = field(default_factory=dict)
+    variant: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class ShardingDecision:
+    cell: Tuple[str, str, bool]
+    winner: ShardingCandidate
+    dominant_term_s: float
+    trail: List[Dict[str, Any]]          # per-candidate roofline records
+
+
+DEFAULT_CANDIDATES: Dict[str, List[ShardingCandidate]] = {
+    "train": [
+        ShardingCandidate("baseline"),
+        ShardingCandidate("accum_half", {"accum_steps": 2}),
+        ShardingCandidate("accum_1", {"accum_steps": 1}),
+        ShardingCandidate("remat_dots", {"remat_policy": "dots"}),
+    ],
+    "decode": [
+        ShardingCandidate("baseline"),
+        ShardingCandidate("cache_seq_shard", {}, {"cache_seq_shard": True}),
+        ShardingCandidate("flash_decode", {}, {"flash_decode": True}),
+    ],
+    "prefill": [ShardingCandidate("baseline")],
+}
+
+
+def dominant_term(record: Dict[str, Any]) -> float:
+    return max(record["compute_s"], record["memory_s"],
+               record["collective_s"])
+
+
+def advise(arch: str, shape: str, *, multi_pod: bool = False,
+           candidates: Optional[Sequence[ShardingCandidate]] = None,
+           analyze=None) -> ShardingDecision:
+    """Lower every candidate, score by the dominant roofline term, return
+    the argmin.  ``analyze`` is injectable for tests (defaults to the real
+    dry-run ``analyze_cell`` — requires the 512-device env flag)."""
+    if analyze is None:
+        from ..launch.dryrun import analyze_cell as analyze
+    from ..configs import SHAPES
+    kind = SHAPES[shape].kind
+    cands = list(candidates) if candidates is not None \
+        else DEFAULT_CANDIDATES[kind]
+
+    trail: List[Dict[str, Any]] = []
+    best: Optional[Tuple[float, ShardingCandidate]] = None
+    for cand in cands:
+        try:
+            rec = analyze(arch, shape, multi_pod=multi_pod,
+                          extra_cfg=cand.extra_cfg or None,
+                          variant=cand.variant or None, verbose=False)
+        except Exception as e:                    # candidate may not lower
+            trail.append({"candidate": cand.name, "error": repr(e)})
+            continue
+        rec["candidate"] = cand.name
+        trail.append(rec)
+        score = dominant_term(rec)
+        if best is None or score < best[0]:
+            best = (score, cand)
+    if best is None:
+        raise RuntimeError("no sharding candidate lowered successfully")
+    return ShardingDecision(cell=(arch, shape, multi_pod), winner=best[1],
+                            dominant_term_s=best[0], trail=trail)

@@ -1,0 +1,48 @@
+"""Bridge: Lachesis partitionings ⇄ JAX shardings.
+
+A persistent partitioning over ``m`` workers maps onto a TPU mesh as a
+``NamedSharding`` whose leading (worker) axis is laid out over the data axes.
+The *match ⇒ elide-shuffle* decision becomes: if a consumer step function's
+required input ``PartitionSpec`` equals the stored one, XLA inserts **no
+resharding collective** for that operand — verified structurally in the
+dry-run by counting collectives in the lowered HLO.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .partitioner import PartitionerCandidate
+
+
+def sharding_for(mesh: Mesh, candidate: Optional[PartitionerCandidate],
+                 data_axes: Tuple[str, ...] = ("data",),
+                 extra_dims: int = 0) -> NamedSharding:
+    """Sharding of a stored dataset's ``(m, capacity, ...)`` layout.
+
+    Keyed/rr/random partitionings all distribute rows across workers, so the
+    worker axis is sharded over the data mesh axes; what differs is the
+    *assignment* of rows to workers, which lives in the partitioner, not the
+    sharding.  Trailing dims are replicated unless the caller shards them.
+    """
+    spec = P(data_axes if len(data_axes) > 1 else data_axes[0],
+             *([None] * (1 + extra_dims)))
+    return NamedSharding(mesh, spec)
+
+
+def specs_match(a: P, b: P) -> bool:
+    """Structural PartitionSpec equality modulo trailing Nones — the
+    sharding-level analogue of Alg. 4's signature equality."""
+    la, lb = list(a), list(b)
+    n = max(len(la), len(lb))
+    la += [None] * (n - len(la))
+    lb += [None] * (n - len(lb))
+    return la == lb
+
+
+def would_elide_collective(stored: P, required: P) -> bool:
+    """True ⇒ consuming the operand needs no resharding collective."""
+    return specs_match(stored, required)

@@ -1,0 +1,156 @@
+"""Persistent partitioned storage — the Pangea-storage analogue (paper §4).
+
+A :class:`PartitionStore` holds named columnar datasets laid out across ``m``
+logical workers.  The layout is the *persistent partitioning*: column arrays
+are shaped ``(m, capacity, ...)`` with a per-worker ``counts`` vector, so a
+consumer whose desired partitioner matches the stored one operates strictly
+worker-locally (no shuffle).  On a TPU pod the leading axis maps onto the
+mesh via ``NamedSharding(mesh, P("data"))`` — see core/sharding_bridge.
+
+TPU adaptation (DESIGN §2): objects → fixed-capacity padded rows; skew shows
+up as padding waste, penalized by the ``key_distribution`` feature.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.partitioner import (HASH, PartitionerCandidate, RANDOM,
+                                ROUND_ROBIN)
+
+
+Columns = Dict[str, np.ndarray]
+
+
+@dataclass
+class StoredDataset:
+    name: str
+    columns: Columns                   # each (m, capacity, ...)
+    counts: np.ndarray                 # (m,) valid rows per worker
+    partitioner: Optional[PartitionerCandidate]
+    num_rows: int
+    nbytes: int
+    created_at: float = field(default_factory=time.time)
+
+    @property
+    def num_workers(self) -> int:
+        return int(self.counts.shape[0])
+
+    @property
+    def capacity(self) -> int:
+        return int(next(iter(self.columns.values())).shape[1])
+
+    def skew(self) -> float:
+        """max/mean partition fill — load-balance diagnostic."""
+        mean = max(self.counts.mean(), 1e-9)
+        return float(self.counts.max() / mean)
+
+    def gather(self) -> Columns:
+        """Materialize back to flat rows (host-side, used by shuffles)."""
+        out: Columns = {}
+        for k, v in self.columns.items():
+            parts = [v[w, :self.counts[w]] for w in range(self.num_workers)]
+            out[k] = np.concatenate(parts, axis=0)
+        return out
+
+
+class PartitionStore:
+    def __init__(self, num_workers: int = 8):
+        self.m = num_workers
+        self.datasets: Dict[str, StoredDataset] = {}
+        self.write_log: List[Dict[str, Any]] = []
+
+    # -- write path (storage-time partitioning) ------------------------------
+    def write(self, name: str, data: Columns,
+              partitioner: Optional[PartitionerCandidate] = None,
+              seed: int = 0) -> StoredDataset:
+        """Dispatch each row to a worker via ``g(d_i)`` and persist."""
+        t0 = time.perf_counter()
+        n = len(next(iter(data.values())))
+        if partitioner is None:
+            partitioner = PartitionerCandidate(graph=None, strategy=ROUND_ROBIN)
+        pids = np.asarray(partitioner.partition_ids(data, self.m)) \
+            if partitioner.strategy != RANDOM else \
+            np.random.default_rng(seed).integers(0, self.m, size=n)
+        pids = np.asarray(pids, np.int64)
+
+        order = np.argsort(pids, kind="stable")
+        sorted_pids = pids[order]
+        counts = np.bincount(sorted_pids, minlength=self.m)
+        cap = int(counts.max()) if n else 1
+        offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+
+        columns: Columns = {}
+        for k, v in data.items():
+            v = np.asarray(v)
+            buf = np.zeros((self.m, cap) + v.shape[1:], v.dtype)
+            sv = v[order]
+            for w in range(self.m):
+                c = counts[w]
+                if c:
+                    buf[w, :c] = sv[offsets[w]:offsets[w] + c]
+            columns[k] = buf
+
+        nbytes = int(sum(np.asarray(v).nbytes for v in data.values()))
+        ds = StoredDataset(name=name, columns=columns,
+                           counts=counts.astype(np.int64),
+                           partitioner=partitioner, num_rows=n, nbytes=nbytes)
+        self.datasets[name] = ds
+        self.write_log.append({
+            "name": name, "rows": n, "bytes": nbytes,
+            "strategy": partitioner.strategy,
+            "latency": time.perf_counter() - t0,
+            "skew": ds.skew(),
+        })
+        return ds
+
+    def write_layout(self, name: str, flat_columns: Columns,
+                     counts: np.ndarray,
+                     partitioner: Optional[PartitionerCandidate]
+                     ) -> StoredDataset:
+        """Persist an ALREADY-partitioned table (flat columns segmented per
+        worker by ``counts``) without re-dispatching — used when a workload
+        materializes an output whose layout was produced by its own
+        partition nodes (e.g. iterative PageRank writing updated ranks)."""
+        counts = np.asarray(counts, np.int64)
+        n = int(counts.sum())
+        cap = int(counts.max()) if n else 1
+        offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        columns: Columns = {}
+        for k, v in flat_columns.items():
+            v = np.asarray(v)
+            buf = np.zeros((self.m, cap) + v.shape[1:], v.dtype)
+            for w in range(self.m):
+                c = counts[w]
+                if c:
+                    buf[w, :c] = v[offsets[w]:offsets[w] + c]
+            columns[k] = buf
+        nbytes = int(sum(np.asarray(v).nbytes for v in flat_columns.values()))
+        ds = StoredDataset(name=name, columns=columns, counts=counts,
+                           partitioner=partitioner, num_rows=n, nbytes=nbytes)
+        self.datasets[name] = ds
+        return ds
+
+    # -- read path -------------------------------------------------------------
+    def read(self, name: str) -> StoredDataset:
+        return self.datasets[name]
+
+    def stored_partitioners(self) -> Dict[str, Optional[PartitionerCandidate]]:
+        return {n: d.partitioner for n, d in self.datasets.items()}
+
+    # -- shuffle (the operation Lachesis exists to avoid) ------------------------
+    def repartition(self, ds: StoredDataset,
+                    partitioner: PartitionerCandidate,
+                    name: Optional[str] = None) -> Tuple[StoredDataset, int]:
+        """Full shuffle: gather + re-bucket.  Returns (new ds, bytes moved).
+
+        Bytes moved = (m-1)/m of the dataset on average (every row whose new
+        worker differs from its current one crosses the network)."""
+        flat = ds.gather()
+        moved = int(ds.nbytes * (self.m - 1) / self.m)
+        new = self.write(name or ds.name + "@reparted", flat, partitioner)
+        return new, moved

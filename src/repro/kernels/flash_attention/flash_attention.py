@@ -1,0 +1,143 @@
+"""Flash attention Pallas TPU kernel.
+
+Canonical online-softmax formulation: grid (B, H, nq, nk) with the kv-block
+dimension innermost/sequential; running max ``m``, denominator ``l`` and the
+output accumulator live in VMEM scratch and are carried across kv blocks.
+GQA is handled *in the index map* (kv head = h // group), so K/V are never
+materialized per-query-head.
+
+BlockSpec tiling (VMEM working set per step):
+    q tile  (1, 1, block_q, hd)
+    k tile  (1, 1, block_k, hd)
+    v tile  (1, 1, block_k, hd)
+    acc     (block_q, hd) f32 + m/l (block_q,) f32
+With block_q = block_k = 512 and hd = 128: ~1.5 MB — far under the ~16 MB
+v5e VMEM, and all matmul dims are multiples of 128 (MXU-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: float, block_q: int, block_k: int, kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # skip fully-masked tiles (causal: kv block strictly after the q block)
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        mask = k_pos < kv_len                  # masks kv padding tail
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: float = 0.0, scale: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, hd); k/v: (B, KV, Skv, hd); KV divides H."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded kv positions are masked off via window/causal iota masks
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Skv_p = q.shape[2], k.shape[2]
+    nq, nk = Sq_p // block_q, Skv_p // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, kv_len=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, _G=G: (b, h // _G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, _G=G: (b, h // _G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

@@ -1,0 +1,34 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+On TPU this dispatches to the Pallas kernel; everywhere else (this CPU
+container) it validates through ``interpret=True`` or falls back to the
+pure-jnp oracle.  The model layers call ``layers.auto_sdpa`` (the jnp
+blockwise path); serving/training on real TPUs flips ``use_kernel=True``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                                   "block_q", "block_k", "interpret",
+                                   "use_kernel"))
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None, softcap: float = 0.0,
+              scale: Optional[float] = None, block_q: int = 512,
+              block_k: int = 512, interpret: bool = False,
+              use_kernel: bool = True):
+    """q: (B,H,S,hd); k/v: (B,KV,S,hd)."""
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, scale=scale, block_q=block_q,
+                           block_k=block_k, interpret=interpret)

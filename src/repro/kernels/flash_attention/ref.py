@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout (B, H, S, hd) — kernel-native.  GQA: KV heads broadcast by group.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: float = 0.0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (B,H,Sq,hd); k/v: (B,KV,Skv,hd); KV divides H."""
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kf)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

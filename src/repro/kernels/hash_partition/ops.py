@@ -1,0 +1,21 @@
+"""Jitted wrapper for the hash-partition kernel (falls back to the oracle
+off-TPU; the PartitionStore calls this at storage time)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+
+from .hash_partition import hash_partition
+from .ref import hash_partition_ref
+
+
+@partial(jax.jit, static_argnames=("num_partitions", "interpret",
+                                   "use_kernel"))
+def partition_ids(keys, num_partitions: int, *, interpret: bool = False,
+                  use_kernel: bool = True) -> Tuple[jax.Array, jax.Array]:
+    if not use_kernel:
+        return hash_partition_ref(keys, num_partitions)
+    return hash_partition(keys, num_partitions, interpret=interpret)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused hash-partition kernel."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wang_hash(x: jax.Array) -> jax.Array:
+    """Deterministic 32-bit integer mix (matches core.ir._mix_hash)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ jnp.uint32(61)) ^ (x >> 16)
+    x = x * jnp.uint32(9)
+    x = x ^ (x >> 4)
+    x = x * jnp.uint32(0x27D4EB2D)
+    x = x ^ (x >> 15)
+    return x
+
+
+def hash_partition_ref(keys: jax.Array,
+                       num_partitions: int) -> Tuple[jax.Array, jax.Array]:
+    """keys: (N,) int32/uint32 → (pids (N,) int32, counts (m,) int32).
+
+    ``g_hh(d) = hash(f(d)) % m`` + the per-partition histogram the store
+    needs to size its buffers — the paper's storage-time dispatch."""
+    pids = (wang_hash(keys) % jnp.uint32(num_partitions)).astype(jnp.int32)
+    counts = jnp.bincount(pids, length=num_partitions).astype(jnp.int32)
+    return pids, counts

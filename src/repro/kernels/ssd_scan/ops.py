@@ -1,0 +1,19 @@
+"""Jitted wrapper for the SSD kernel (oracle fallback off-TPU)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+
+from .ref import ssd_ref
+from .ssd_scan import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = False,
+        use_kernel: bool = True) -> Tuple[jax.Array, jax.Array]:
+    if not use_kernel:
+        return ssd_ref(x, dt, A, Bm, Cm, chunk)
+    return ssd_scan(x, dt, A, Bm, Cm, chunk, interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the chunked SSD kernel — reuses the model's
+reference implementation (models/ssd.ssd_scan_ref)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from ...models.ssd import ssd_scan_ref
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array, chunk: int,
+            init_state: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,T,H,P); dt: (B,T,H); A: (H,); Bm/Cm: (B,T,N)."""
+    return ssd_scan_ref(x, dt, A, Bm, Cm, chunk, init_state)

@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS before any jax import and only then calls
+``make_production_mesh``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(multi_pod: bool) -> Tuple[str, ...]:
+    """Mesh axes the batch is sharded over."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def mesh_counts(mesh) -> Tuple[int, int]:
+    """(dp_size, model_size) of a production mesh."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    return dp, model
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_LINK_BW = 50e9             # bytes/s per link

@@ -1,0 +1,270 @@
+"""Sharding rules: param/batch/cache PartitionSpecs for every arch × mesh.
+
+This is the *default persistent partitioning* of the model state — the
+baseline the Lachesis sharding advisor (core/sharding_advisor.py) starts
+from.  Rules are path-based over the params pytree:
+
+  column-parallel (out-dim over "model"): wq wk wv wq_a wq_b wkv_b in_proj
+      in_x in_gate w_r w_i w_in w_gate, ssd/rglru conv channels
+  row-parallel   (in-dim over "model"):  wo out out_proj w_out
+  expert-parallel: MoE (E, ·, ·) tensors sharded on E over "model"
+  vocab-parallel: embedding / unembedding tables on dim 0
+  replicated: norms, routers, tiny vectors (Λ, A_log, D, dt_bias)
+
+Small models (< 1B params) use pure data parallelism: params replicated,
+batch sharded over every mesh axis that divides it — the layout a sharding
+advisor picks when TP collectives would dominate.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+
+COL_PARENTS = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_b", "in_proj",
+               "in_x", "in_gate", "w_r", "w_i", "w_in", "w_gate"}
+ROW_PARENTS = {"wo", "out", "out_proj", "w_out"}
+REPLICATED_PARENTS = {"wkv_a", "router"}   # latent proj small → cache replicated
+TINY_LEAVES = {"lam", "A_log", "D", "dt_bias", "scale", "bias", "conv_b"}
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    # works for both Mesh and AbstractMesh
+    return dict(mesh.shape)
+
+
+def small_model(cfg: ArchConfig, threshold: float = 1e9) -> bool:
+    return cfg.param_count() < threshold
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _base_param_rule(parts, shape, model: int) -> P:
+    """Rule for an UNstacked param leaf."""
+    leaf = parts[-1]
+    parent = parts[-2] if len(parts) > 1 else ""
+    nd = len(shape)
+
+    if leaf in TINY_LEAVES or parent.startswith("ln") or \
+            parent in ("final_norm", "norm", "q_norm", "k_norm", "kv_norm"):
+        return P(*([None] * nd))
+    if leaf == "table":                                   # embed / unembed
+        return P("model" if _div(shape[0], model) else None, None)
+    if leaf == "pos_embed" or parts[-1] == "pos_embed":
+        return P(None, None)
+    if parent in REPLICATED_PARENTS:
+        return P(*([None] * nd))
+    if leaf == "conv_w" and nd == 2:                      # (W, C) depthwise
+        return P(None, "model" if _div(shape[1], model) else None)
+    if nd == 3 and leaf in ("w_in", "w_gate", "w_out"):   # MoE experts (E,·,·)
+        return P("model" if _div(shape[0], model) else None, None, None)
+    if leaf == "w" and parent in COL_PARENTS:
+        return P(None, "model" if _div(shape[1], model) else None)
+    if leaf == "w" and parent in ROW_PARENTS:
+        return P("model" if _div(shape[0], model) else None, None)
+    if leaf == "b":
+        if parent in COL_PARENTS:
+            return P("model" if _div(shape[0], model) else None)
+        return P(None)
+    return P(*([None] * nd))                              # default: replicate
+
+
+def param_pspecs(cfg: ArchConfig, params_struct: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``params_struct``."""
+    sizes = _axis_sizes(mesh)
+    model = sizes.get("model", 1)
+    dp_only = small_model(cfg)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if dp_only:
+            # pure DP: replicate everything (advisor-selected for <1B)
+            return P(*([None] * len(shape)))
+        parts = _path_str(path).split("/")
+        stacked = parts[0] in ("blocks", "encoder") and "blocks" in parts[:2]
+        base_parts = [p for p in parts if not (p.startswith("s")
+                                               and p[1:].isdigit())]
+        if stacked:
+            base = _base_param_rule(base_parts, shape[1:], model)
+            return P(None, *base)
+        return _base_param_rule(base_parts, shape, model)
+
+    return jax.tree_util.tree_map_with_path(rule, params_struct)
+
+
+def batch_axes_for(B: int, cfg: ArchConfig, mesh: Mesh) -> Tuple[str, ...]:
+    """Largest mesh-axis prefix whose product divides B.  Small models also
+    spread batch over the model axis (pure DP over the whole pod)."""
+    sizes = _axis_sizes(mesh)
+    names = [a for a in mesh.axis_names if a != "model"]
+    if small_model(cfg):
+        names = names + ["model"]
+    while names:
+        prod = math.prod(sizes[a] for a in names)
+        if _div(B, prod):
+            return tuple(names)
+        names.pop()                                       # drop last axis
+    return ()
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                 batch_override: Optional[int] = None) -> Dict[str, P]:
+    B = batch_override or shape.global_batch
+    dp = batch_axes_for(B, cfg, mesh)
+    dp_spec = dp if len(dp) != 1 else dp[0]
+    specs = {"tokens": P(dp_spec, None), "labels": P(dp_spec, None)}
+    if cfg.encoder is not None:
+        specs["frames"] = P(dp_spec, None, None)
+    return specs
+
+
+def _cache_leaf_rule(parts, shape, dp: Tuple[str, ...], dp_size: int,
+                     model: int) -> P:
+    leaf = parts[-1]
+    nd = len(shape)
+    dp_spec: Any = (dp if len(dp) != 1 else dp[0]) if dp else None
+
+    # strip stacked leading dims (blocks G axis / cross layer axis)
+    lead = 1 if parts[0] in ("blocks", "cross") else 0
+    core = shape[lead:]
+    pre = [None] * lead
+
+    def b_or_l(B, Lc):
+        """Shard batch over dp when it divides; else shard the cache's
+        sequence axis (ring/sequence-parallel KV for batch-1 long context)."""
+        if dp and _div(B, dp_size):
+            return dp_spec, None
+        if dp and Lc is not None and _div(Lc, dp_size):
+            return None, dp_spec
+        return None, None
+
+    if leaf in ("k", "v"):                                # (B, L, KV, hd)
+        B, Lc, KV, hd = core
+        b_ax, l_ax = b_or_l(B, Lc)
+        if _div(KV, model):
+            return P(*pre, b_ax, l_ax, "model", None)
+        if _div(hd, model):
+            return P(*pre, b_ax, l_ax, None, "model")
+        return P(*pre, b_ax, l_ax, None, None)
+    if leaf == "ckv":                                     # (B, L, R)
+        B, Lc, R = core
+        b_ax, l_ax = b_or_l(B, Lc)
+        return P(*pre, b_ax, l_ax, "model" if _div(R, model) else None)
+    if leaf == "krope":
+        B, Lc, _ = core
+        b_ax, l_ax = b_or_l(B, Lc)
+        return P(*pre, b_ax, l_ax, None)
+    if leaf == "h" and len(core) == 4:                    # ssd (B,H,P,N)
+        B, H, Pd, N = core
+        b_ax, _ = b_or_l(B, None)
+        return P(*pre, b_ax, "model" if _div(H, model) else None, None, None)
+    if leaf == "h" and len(core) == 2:                    # rglru (B,W)
+        B, W = core
+        b_ax, _ = b_or_l(B, None)
+        return P(*pre, b_ax, "model" if _div(W, model) else None)
+    if leaf == "conv":                                    # (B, W-1, C)
+        B, _, C = core
+        b_ax, _ = b_or_l(B, None)
+        return P(*pre, b_ax, None, "model" if _div(C, model) else None)
+    return P(*([None] * nd))
+
+
+def cache_pspecs(cfg: ArchConfig, cache_struct: Any, B: int,
+                 mesh: Mesh, seq_shard_model: bool = False) -> Any:
+    """``seq_shard_model``: additionally shard the cache SEQUENCE axis over
+    "model" (flash-decode style — each model rank attends over L/mp keys and
+    the softmax combines via psum).  §Perf decode hillclimb knob."""
+    sizes = _axis_sizes(mesh)
+    model = sizes.get("model", 1)
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    if small_model(cfg):
+        dp = dp + ("model",)
+    dp_size = math.prod(sizes[a] for a in dp) if dp else 1
+    model_eff = 0 if small_model(cfg) else model   # 0 ⇒ never model-shard
+
+    def rule(path, leaf):
+        parts = _path_str(path).split("/")
+        parts = [p for p in parts if not (p.startswith("s") and p[1:].isdigit())]
+        spec = _cache_leaf_rule(parts, leaf.shape, dp, dp_size, model_eff)
+        if seq_shard_model and parts[-1] in ("k", "v", "ckv", "krope"):
+            lead = 1 if parts[0] in ("blocks", "cross") else 0
+            seq_dim = lead + 1
+            Ld = leaf.shape[seq_dim]
+            if Ld % max(model, 1) == 0 and model > 1:
+                # move the model axis from heads/hd onto the sequence dim
+                entries = [None if e == "model" else e for e in list(spec)]
+                entries[seq_dim] = "model"
+                spec = P(*entries)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, cache_struct)
+
+
+def shard_over_dp(param_specs: Any, params_struct: Any, mesh: Mesh,
+                  skip_stacked_dim: bool = True) -> Any:
+    """Additionally shard each tensor over the DP axes along the first
+    unsharded, divisible dimension.  Used for (a) ZeRO-1 optimizer moments
+    and (b) FSDP parameter sharding of ≥50B models.  The scanned layer-stack
+    axis (dim 0 under blocks/) is skipped — sharding it would turn every
+    scan iteration into a cross-DP dynamic-slice."""
+    sizes = _axis_sizes(mesh)
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dp_size = math.prod(sizes[a] for a in dp) if dp else 1
+    dp_spec: Any = dp if len(dp) != 1 else (dp[0] if dp else None)
+
+    def rule(path, spec, leaf):
+        if dp_size <= 1:
+            return spec
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = {a for e in entries if e is not None
+                for a in (e if isinstance(e, tuple) else (e,))}
+        if used & set(dp):
+            return P(*entries)          # already dp-sharded somewhere
+        parts = _path_str(path).split("/")
+        stacked = parts[0] in ("blocks", "encoder") and skip_stacked_dim
+        start = 1 if stacked else 0
+        for i in range(start, len(entries)):
+            if entries[i] is None and leaf.shape[i] % dp_size == 0:
+                entries[i] = dp_spec
+                break
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(rule, param_specs, params_struct)
+
+
+FSDP_THRESHOLD = 50e9     # params ≥ 50B: shard params over DP axes too
+
+
+def train_state_pspecs(cfg: ArchConfig, state_struct: Any, mesh: Mesh,
+                       zero1: bool = True,
+                       fsdp: Optional[bool] = None) -> Any:
+    """Specs for {"params", "opt": AdamWState(step, m, v)}."""
+    pspec = param_pspecs(cfg, state_struct["params"], mesh)
+    fsdp = (cfg.param_count() >= FSDP_THRESHOLD) if fsdp is None else fsdp
+    if fsdp:
+        pspec = shard_over_dp(pspec, state_struct["params"], mesh)
+    mspec = pspec
+    if zero1 and not small_model(cfg):
+        mspec = shard_over_dp(pspec, state_struct["params"], mesh)
+    opt = state_struct["opt"]
+    return {"params": pspec,
+            "opt": type(opt)(step=P(), m=mspec, v=mspec)}
+
+
+def to_named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns everything a step function is lowered
+with: train → (state, batch); prefill → (params, batch); decode →
+(params, cache, tokens, pos).  The same structs feed the sharding rules.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models import transformer as T
+from ..optimizer.adamw import AdamW
+
+SDS = jax.ShapeDtypeStruct
+
+
+def params_struct(cfg: ArchConfig) -> Any:
+    key = SDS((2,), jnp.uint32)
+    return jax.eval_shape(partial(T.init_params, cfg), key)
+
+
+def state_struct(cfg: ArchConfig, optimizer: AdamW) -> Any:
+    ps = params_struct(cfg)
+    opt = jax.eval_shape(optimizer.init, ps)
+    return {"params": ps, "opt": opt}
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec,
+                 batch_override: Optional[int] = None,
+                 seq_override: Optional[int] = None) -> Dict[str, SDS]:
+    B = batch_override or shape.global_batch
+    S = seq_override or shape.seq_len
+    out = {"tokens": SDS((B, S), jnp.int32),
+           "labels": SDS((B, S), jnp.int32)}
+    if cfg.encoder is not None:
+        out["frames"] = SDS((B, cfg.encoder.num_frames, cfg.d_model),
+                            jnp.dtype(cfg.param_dtype))
+    return out
+
+
+def cache_struct(cfg: ArchConfig, B: int, Lc: int) -> Any:
+    # B/Lc stay static Python ints (shape-building); eval_shape only
+    # abstracts away the zeros allocation
+    return jax.eval_shape(lambda: T.init_cache(cfg, B, Lc))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                optimizer: Optional[AdamW] = None) -> Dict[str, Any]:
+    """All lowering inputs for one (arch × shape) cell."""
+    if shape.kind == "train":
+        assert optimizer is not None
+        return {"state": state_struct(cfg, optimizer),
+                "batch": batch_struct(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params_struct(cfg),
+                "batch": batch_struct(cfg, shape)}
+    if shape.kind == "decode":
+        B = shape.global_batch
+        return {"params": params_struct(cfg),
+                "cache": cache_struct(cfg, B, shape.seq_len),
+                "tokens": SDS((B, 1), jnp.int32),
+                "pos": SDS((), jnp.int32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,104 @@
+"""Train / serve step factories (pure functions of (state, batch))."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import transformer as T
+from ..optimizer.adamw import AdamW, AdamWState, global_norm
+from ..optimizer.schedule import warmup_cosine
+
+
+def make_optimizer(cfg: ArchConfig, peak_lr: float = 3e-4,
+                   total_steps: int = 10_000) -> AdamW:
+    return AdamW(lr=warmup_cosine(peak_lr, min(500, total_steps // 10 + 1),
+                                  total_steps),
+                 b1=0.9, b2=0.95, weight_decay=0.1, grad_clip_norm=1.0,
+                 state_dtype=jnp.bfloat16 if cfg.opt_state_bf16 else None)
+
+
+def init_train_state(cfg: ArchConfig, key, optimizer: AdamW,
+                     compression: Optional[str] = None) -> Dict[str, Any]:
+    params = T.init_params(cfg, key)
+    state = {"params": params, "opt": optimizer.init(params)}
+    if compression:
+        from ..optimizer.compression import init_error_feedback
+        state["ef"] = init_error_feedback(params)
+    return state
+
+
+def make_train_step(cfg: ArchConfig, optimizer: AdamW,
+                    compression: Optional[str] = None,
+                    topk_frac: float = 0.05) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``cfg.accum_steps > 1`` microbatches the global batch through a
+    ``lax.scan`` gradient accumulation (one live microbatch of activations).
+
+    ``compression`` ∈ {None, "int8", "topk"}: compress gradients before the
+    DP reduction with error feedback (state carries the residual).  On real
+    hardware the psum operates on the compressed payload; here the
+    compress→decompress pair is applied in-program and the wire-byte count
+    is returned in metrics."""
+
+    def loss_of(params, batch):
+        return T.loss_fn(cfg, params, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        A = cfg.accum_steps
+        if A == 1:
+            (loss, met), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _m), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                return (jax.tree.map(lambda a, b: a + b, g_acc, g),
+                        l_acc + l), None
+            mb0 = jax.tree.map(
+                lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), batch)
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss), _ = jax.lax.scan(micro,
+                                            (zeros, jnp.zeros((), jnp.float32)),
+                                            mb0)
+            grads = jax.tree.map(lambda g: g / A, grads)
+            loss = loss / A
+            met = {"ce": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+        gnorm = global_norm(grads)
+        new_state = {}
+        if compression is not None:
+            from ..optimizer import compression as C
+            ef = state["ef"]
+            if compression == "int8":
+                grads, ef, wire = C.compress_int8(grads, ef)
+            elif compression == "topk":
+                grads, ef, wire = C.compress_topk(grads, ef, frac=topk_frac)
+            else:
+                raise ValueError(compression)
+            new_state["ef"] = ef
+            met = dict(met, wire_bytes=jnp.asarray(wire, jnp.float32))
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        metrics = {"loss": loss, "grad_norm": gnorm, **met}
+        new_state.update({"params": new_params, "opt": new_opt})
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch["tokens"],
+                         frames=batch.get("frames"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    def decode_step(params, cache, tokens, pos):
+        return T.decode_step(cfg, params, cache, tokens, pos)
+    return decode_step

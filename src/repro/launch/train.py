@@ -1,0 +1,138 @@
+"""End-to-end training driver: data pipeline → train loop → checkpoints,
+with fault-tolerant restart, straggler-tolerant input, and history logging
+so Lachesis can advise future runs.
+
+CPU-scale usage (examples/train_lm.py):
+    python -m repro.launch.train --arch mamba2-370m --reduced \
+        --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+On a pod, the same loop runs under the dry-run's shardings (see dryrun.py);
+this driver is the single-host reference implementation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.checkpoint import (latest_step, restore_checkpoint,
+                                     save_checkpoint)
+from ..configs import get_config
+from ..configs.reduced import reduced as make_reduced
+from ..data.pipeline import DataConfig, TokenSource
+from ..runtime.fault_tolerance import Coordinator, WorkerFailure
+from ..runtime.straggler import StragglerMitigator
+from . import steps as steps_lib
+
+
+@dataclasses.dataclass
+class TrainRun:
+    cfg: Any
+    total_steps: int
+    global_batch: int
+    seq_len: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    peak_lr: float = 3e-4
+    seed: int = 0
+    log_every: int = 10
+    fail_at_step: Optional[int] = None     # fault-injection for tests
+
+
+def train(run: TrainRun) -> Dict[str, Any]:
+    cfg = run.cfg
+    opt = steps_lib.make_optimizer(cfg, peak_lr=run.peak_lr,
+                                   total_steps=run.total_steps)
+    train_step = jax.jit(steps_lib.make_train_step(cfg, opt),
+                         donate_argnums=(0,))
+    source = TokenSource(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=run.seq_len,
+                                    global_batch=run.global_batch,
+                                    num_hosts=1, seed=run.seed))
+    coord = Coordinator(num_workers=1)
+    straggler = StragglerMitigator()
+
+    # init or restore
+    state = steps_lib.init_train_state(cfg, jax.random.PRNGKey(run.seed), opt)
+    start = 0
+    if run.ckpt_dir and latest_step(run.ckpt_dir) is not None:
+        state, start, extra = restore_checkpoint(run.ckpt_dir, state)
+        print(f"[train] restored step {start}")
+
+    losses = []
+    t0 = time.time()
+    step = start
+    while step < run.total_steps:
+        if run.fail_at_step is not None and step == run.fail_at_step:
+            run.fail_at_step = None            # fail once
+            raise WorkerFailure(f"injected failure at step {step}")
+        batch_np = straggler.fetch_shard(
+            lambda s, h: source.batch_at(s, h), step, host=0, backup_host=0)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        if cfg.encoder is not None:
+            batch["frames"] = jnp.zeros(
+                (run.global_batch, cfg.encoder.num_frames, cfg.d_model),
+                jnp.dtype(cfg.param_dtype))
+        state, metrics = train_step(state, batch)
+        coord.heartbeat(0, step)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % run.log_every == 0:
+            rate = (step - start + 1) / (time.time() - t0)
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({rate:.2f} steps/s)", flush=True)
+        step += 1
+        if run.ckpt_dir and step % run.ckpt_every == 0:
+            save_checkpoint(run.ckpt_dir, step, state,
+                            extra={"data_step": step})
+    if run.ckpt_dir:
+        save_checkpoint(run.ckpt_dir, step, state,
+                        extra={"data_step": step})
+    return {"state": state, "losses": losses, "final_step": step}
+
+
+def train_with_restarts(run: TrainRun, max_attempts: int = 4):
+    """Crash-recovery wrapper: restart from the latest checkpoint on
+    (injected or real) worker failure."""
+    for attempt in range(max_attempts):
+        try:
+            return train(run)
+        except WorkerFailure as e:
+            print(f"[train] {e} — restarting from checkpoint "
+                  f"(attempt {attempt + 1})")
+    raise RuntimeError("too many restarts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU-scale reduced sibling config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--accum", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    cfg = dataclasses.replace(cfg, accum_steps=args.accum)
+    out = train_with_restarts(TrainRun(
+        cfg=cfg, total_steps=args.steps, global_batch=args.batch,
+        seq_len=args.seq, ckpt_dir=args.ckpt_dir, peak_lr=args.lr))
+    print(f"[train] done: loss {out['losses'][0]:.4f} → "
+          f"{out['losses'][-1]:.4f} over {out['final_step']} steps")
+
+
+if __name__ == "__main__":
+    main()

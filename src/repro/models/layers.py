@@ -1,0 +1,407 @@
+"""Shared transformer layers: norms, RoPE, GQA/MQA attention, gated FFNs.
+
+Everything is a pure function over dict pytrees so the whole stack lowers
+through jax.eval_shape / pjit without allocation, scans over stacked layer
+params, and remats cleanly.  Initializers return the params for one layer;
+models stack them with jax.vmap over an init key axis.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype) -> Params:
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, p: Params, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Interleaved (adjacent-pair) RoPE.  x: (..., S, H, hd).
+
+    Pair (2i, 2i+1) rotates by freq_i — mathematically equivalent to the
+    rotate-half formulation up to a fixed index permutation (q and k share
+    it, so attention scores are identical).  Chosen because the rotation is
+    SHARD-LOCAL when hd is sharded over the "model" axis: rotate-half's
+    split at hd/2 crosses shard boundaries and forced GSPMD into
+    involuntary full rematerialization on the decode path (§Perf round 3)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    xr = x.astype(jnp.float32).reshape(x.shape[:-1] + (hd // 2, 2))
+    x1, x2 = xr[..., 0], xr[..., 1]
+    out = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def sinusoidal_embed(length: int, d: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((length, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Dense projections
+# ---------------------------------------------------------------------------
+
+def dense_init(key, din: int, dout: int, dtype, bias: bool = False,
+               scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(din)
+    p = {"w": (jax.random.normal(key, (din, dout), jnp.float32) * scale
+               ).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / MHA, local windows, softcap, NoPE)
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def attention_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, dtype, qkv_bias: bool = False,
+                   qk_norm: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, num_heads * head_dim, dtype, qkv_bias),
+        "wk": dense_init(ks[1], d_model, num_kv_heads * head_dim, dtype, qkv_bias),
+        "wv": dense_init(ks[2], d_model, num_kv_heads * head_dim, dtype, qkv_bias),
+        "wo": dense_init(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(head_dim, dtype)
+    return p
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+         causal: bool, window: Optional[int] = None,
+         attn_softcap: float = 0.0, q_offset: int | jax.Array = 0,
+         kv_len: Optional[jax.Array] = None,
+         scale: Optional[float] = None) -> jax.Array:
+    """Scaled dot-product attention with GQA group broadcasting.
+
+    q: (B, Sq, H, hd); k: (B, Skv, KV, hd); v: (B, Skv, KV, vd) — vd may
+    differ from hd (MLA).  ``q_offset`` is the absolute position of q[0]
+    (decode: the cache write index).  ``kv_len`` masks the valid cache
+    prefix during decode.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    vd = v.shape[3]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    # einsum on the NATIVE (B, S, KV, hd) layout with f32 accumulation:
+    # no transposed/upcast K-V copies ever materialize in HBM (§Perf round-2
+    # fix for memory-bound decode — halves cache-side traffic)
+    qf = ((q * scale).astype(jnp.float32)
+          .reshape(B, Sq, KV, G, hd))                            # h = kv·G+g
+    scores = jnp.einsum("bqkgd,bmkd->bkgqm", qf, k,
+                        preferred_element_type=jnp.float32)      # B,KV,G,Sq,Skv
+    if attn_softcap > 0:
+        scores = softcap(scores, attn_softcap)
+
+    Skv = k.shape[1]
+    q_pos = jnp.arange(Sq)[:, None] + q_offset                   # (Sq,1)
+    k_pos = jnp.arange(Skv)[None, :]                             # (1,Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # bf16 probs × native-layout V, f32 accumulation (flash-style)
+    out = jnp.einsum("bkgqm,bmkd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, vd).astype(q.dtype)
+
+
+BLOCKWISE_THRESHOLD = 2048    # full-S² scores above this would blow HBM
+BLOCKWISE_BLOCK = 512
+
+
+def blockwise_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, window: Optional[int] = None,
+                   attn_softcap: float = 0.0,
+                   q_offset: int | jax.Array = 0,
+                   kv_len: Optional[jax.Array] = None,
+                   scale: Optional[float] = None,
+                   block: int = BLOCKWISE_BLOCK) -> jax.Array:
+    """Memory-bounded attention: lax.scan over query blocks so only a
+    (block × Skv) score tile is ever live — the pure-JAX analogue of the
+    Pallas flash kernel (kernels/flash_attention), used on the reference
+    path for long sequences."""
+    B, Sq, H, hd = q.shape
+    if Sq <= block:
+        return sdpa(q, k, v, causal=causal, window=window,
+                    attn_softcap=attn_softcap, q_offset=q_offset,
+                    kv_len=kv_len, scale=scale)
+    pad = (-Sq) % block
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = q.shape[1] // block
+    qb = q.reshape(B, nb, block, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, xs):
+        i, qi = xs
+        out = sdpa(qi, k, v, causal=causal, window=window,
+                   attn_softcap=attn_softcap,
+                   q_offset=q_offset + i * block, kv_len=kv_len, scale=scale)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nb), qb))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nb * block, H, -1)
+    return out[:, :Sq]
+
+
+FLASH_DECODE_THRESHOLD = 8192
+FLASH_DECODE_BLOCK = 2048
+# default OFF: on CPU-fusion byte accounting the scanned dynamic-slices are
+# charged as full-cache reads per block (artifact); enable per-run for TPU
+# or for the §Perf flash_decode variant
+FLASH_DECODE_ENABLED = False
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 kv_len: Optional[jax.Array] = None,
+                 window: Optional[int] = None,
+                 attn_softcap: float = 0.0,
+                 q_offset: int | jax.Array = 0,
+                 scale: Optional[float] = None,
+                 block: int = FLASH_DECODE_BLOCK,
+                 causal: bool = True) -> jax.Array:
+    """Single-token decode attention with online softmax over KEY blocks.
+
+    The naive path materializes (B, Skv, KV, G) f32 scores+probs — at 32k
+    context that is ~0.5 GB/layer/chip of HBM traffic several times over
+    (§Perf round 4).  Here a ``lax.scan`` walks the cache in ``block``-sized
+    slices carrying running (m, l, acc); scores never exist at full length.
+    q: (B, 1, H, hd); k: (B, Skv, KV, hd); v: (B, Skv, KV, vd)."""
+    B, Sq, H, hd = q.shape
+    assert Sq == 1
+    Skv, KV = k.shape[1], k.shape[2]
+    vd = v.shape[3]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    nb = -(-Skv // block)
+
+    qf = (q * scale).astype(jnp.float32).reshape(B, KV, G, hd)
+
+    def body(carry, i):
+        m, l, acc = carry
+        i0 = i * block
+        kb = jax.lax.dynamic_slice_in_dim(k, i0, block, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, i0, block, axis=1)
+        s = jnp.einsum("bkgd,bmkd->bkgm", qf, kb,
+                       preferred_element_type=jnp.float32)   # (B,KV,G,block)
+        if attn_softcap > 0:
+            s = softcap(s, attn_softcap)
+        k_pos = i0 + jnp.arange(block)
+        mask = k_pos < (kv_len if kv_len is not None else Skv)
+        if window is not None:
+            mask &= (q_offset - k_pos) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgm,bmkd->bkgd", p.astype(v.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    if Skv % block:
+        pad = (-Skv) % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    init = (jnp.full((B, KV, G), -1e30, jnp.float32),
+            jnp.zeros((B, KV, G), jnp.float32),
+            jnp.zeros((B, KV, G, vd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(nb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, H, vd).astype(q.dtype)
+
+
+def auto_sdpa(q, k, v, **kw):
+    if (FLASH_DECODE_ENABLED and q.shape[1] == 1
+            and k.shape[1] >= FLASH_DECODE_THRESHOLD
+            and kw.get("xk") is None):
+        kw2 = {kk: vv for kk, vv in kw.items()}
+        return flash_decode(q, k, v, **kw2)
+    if q.shape[1] > BLOCKWISE_THRESHOLD:
+        return blockwise_sdpa(q, k, v, **kw)
+    return sdpa(q, k, v, **kw)
+
+
+def attention_block(p: Params, x: jax.Array, *, num_heads: int,
+                    num_kv_heads: int, head_dim: int,
+                    positions: jax.Array, use_rope: bool, rope_theta: float,
+                    causal: bool = True, window: Optional[int] = None,
+                    attn_softcap: float = 0.0,
+                    scale: Optional[float] = None,
+                    kv_cache: Optional[Dict[str, jax.Array]] = None,
+                    cache_pos: Optional[jax.Array] = None,
+                    xk: Optional[jax.Array] = None) -> Tuple[jax.Array, Optional[Dict]]:
+    """Self- (or cross-, via ``xk``) attention sublayer.
+
+    Decode: pass ``kv_cache`` ({"k","v"}: (B, L, KV, hd)) and ``cache_pos``;
+    new k/v are written at cache_pos and attention runs over the prefix.
+    """
+    src = x if xk is None else xk
+    q = _split_heads(dense(p["wq"], x), num_heads, head_dim)
+    k = _split_heads(dense(p["wk"], src), num_kv_heads, head_dim)
+    v = _split_heads(dense(p["wv"], src), num_kv_heads, head_dim)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        if xk is None:
+            k = apply_rope(k, positions, rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"],
+                                                 k.astype(kv_cache["k"].dtype),
+                                                 cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"],
+                                                 v.astype(kv_cache["v"].dtype),
+                                                 cache_pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        out = auto_sdpa(q, ck, cv, causal=causal, window=window,
+                        attn_softcap=attn_softcap, q_offset=cache_pos,
+                        kv_len=cache_pos + q.shape[1], scale=scale)
+    else:
+        out = auto_sdpa(q, k, v, causal=causal and xk is None, window=window,
+                        attn_softcap=attn_softcap, scale=scale)
+    y = dense(p["wo"], out.reshape(out.shape[:2] + (num_heads * head_dim,)))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU / GeGLU) and plain MLP
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d_model: int, d_ff: int, dtype,
+             gated: bool = True) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_out": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def ffn(p: Params, x: jax.Array, activation: str = "silu") -> jax.Array:
+    h = dense(p["w_in"], x)
+    act = {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True),
+           "relu": jax.nn.relu}[activation]
+    if "w_gate" in p:
+        h = act(dense(p["w_gate"], x)) * h
+    else:
+        h = act(h)
+    return dense(p["w_out"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return p["table"][tokens]
+
+
+def unembed(p: Params, x: jax.Array, real_vocab: int,
+            cap: float = 0.0) -> jax.Array:
+    logits = x @ p["table"].T
+    if cap > 0:
+        logits = softcap(logits, cap)
+    V = p["table"].shape[0]
+    if real_vocab < V:
+        pad_mask = jnp.arange(V) < real_vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL in fp32; logits (B,S,V), labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

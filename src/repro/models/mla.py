@@ -1,0 +1,168 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV are compressed into a low-rank latent ``c_kv`` (kv_lora_rank) plus a
+shared RoPE key slice; the decode cache stores only (c_kv ‖ k_rope) —
+(kv_lora_rank + rope_head_dim) floats per token instead of
+2·H·head_dim.  For the 500k-context shapes this is the difference between
+a multi-TB and tens-of-GB cache, i.e. the "persistent partitioning" of the
+cache becomes feasible at all.
+
+Shapes follow the paper: per-head dims (nope=128, rope=64, v=128); queries
+optionally low-rank too (q_lora_rank).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (Params, apply_rope, dense, dense_init, rmsnorm,
+                     rmsnorm_init)
+
+
+def mla_init(key, d_model: int, num_heads: int, *, kv_lora_rank: int,
+             q_lora_rank: int, nope_head_dim: int, rope_head_dim: int,
+             v_head_dim: int, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    H = num_heads
+    p: Params = {
+        # queries: d_model -> q_lora -> H*(nope+rope)
+        "wq_a": dense_init(ks[0], d_model, q_lora_rank, dtype),
+        "q_norm": rmsnorm_init(q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], q_lora_rank,
+                           H * (nope_head_dim + rope_head_dim), dtype),
+        # kv: d_model -> (kv_lora + rope) ; latent -> H*(nope + v)
+        "wkv_a": dense_init(ks[2], d_model, kv_lora_rank + rope_head_dim, dtype),
+        "kv_norm": rmsnorm_init(kv_lora_rank, dtype),
+        "wkv_b": dense_init(ks[3], kv_lora_rank,
+                            H * (nope_head_dim + v_head_dim), dtype),
+        "wo": dense_init(ks[4], H * v_head_dim, d_model, dtype),
+    }
+    return p
+
+
+def _project_q(p, x, H, nd, rd, positions, rope_theta):
+    q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x)))
+    q = q.reshape(x.shape[:-1] + (H, nd + rd))
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, x, kv_lora, rd, positions, rope_theta):
+    kv = dense(p["wkv_a"], x)                                    # (...,S,R+rd)
+    c_kv = rmsnorm(p["kv_norm"], kv[..., :kv_lora])
+    k_rope = kv[..., None, kv_lora:]                             # (...,S,1,rd)
+    k_rope = apply_rope(k_rope, positions, rope_theta)
+    return c_kv, k_rope[..., 0, :]
+
+
+def _expand_kv(p, c_kv, H, nd, vd):
+    kvb = dense(p["wkv_b"], c_kv).reshape(c_kv.shape[:-1] + (H, nd + vd))
+    return kvb[..., :nd], kvb[..., nd:]                          # k_nope, v
+
+
+def mla_attention(p: Params, x: jax.Array, *, num_heads: int,
+                  kv_lora_rank: int, nope_head_dim: int, rope_head_dim: int,
+                  v_head_dim: int, rope_theta: float, positions: jax.Array,
+                  cache: Optional[Dict[str, jax.Array]] = None,
+                  cache_pos: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B,S,D).  cache = {"ckv": (B,L,R), "krope": (B,L,rd)}."""
+    B, S, D = x.shape
+    H, nd, rd, vd, R = (num_heads, nope_head_dim, rope_head_dim,
+                        v_head_dim, kv_lora_rank)
+    scale = 1.0 / math.sqrt(nd + rd)
+
+    q_nope, q_rope = _project_q(p, x, H, nd, rd, positions, rope_theta)
+    c_kv, k_rope = _project_kv_latent(p, x, R, rd, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), cache_pos, axis=1)
+        krope = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype),
+            cache_pos, axis=1)
+        new_cache = {"ckv": ckv, "krope": krope}
+        c_kv, k_rope = ckv, krope
+        kv_len = cache_pos + S
+        q_offset = cache_pos
+    else:
+        kv_len = None
+        q_offset = 0
+
+    k_nope, v = _expand_kv(p, c_kv, H, nd, vd)                   # (B,Skv,H,·)
+
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[..., None, :],
+                                  k_nope.shape[:-1] + (rd,))], -1)
+    from .layers import auto_sdpa                   # blockwise for long S
+    out = auto_sdpa(q_full, k_full, v, causal=True, q_offset=q_offset,
+                    kv_len=kv_len, scale=scale)     # (B,S,H,vd)
+    y = dense(p["wo"], out.reshape(B, S, H * vd).astype(x.dtype))
+    return y, new_cache
+
+
+def mla_cache_shape(B: int, L: int, kv_lora_rank: int, rope_head_dim: int,
+                    dtype) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {"ckv": jax.ShapeDtypeStruct((B, L, kv_lora_rank), dtype),
+            "krope": jax.ShapeDtypeStruct((B, L, rope_head_dim), dtype)}
+
+
+def mla_attention_absorbed(p: Params, x: jax.Array, *, num_heads: int,
+                           kv_lora_rank: int, nope_head_dim: int,
+                           rope_head_dim: int, v_head_dim: int,
+                           rope_theta: float, positions: jax.Array,
+                           cache: Dict[str, jax.Array],
+                           cache_pos) -> Tuple[jax.Array, Dict]:
+    """Weight-absorbed MLA decode (beyond-paper perf variant).
+
+    Scores are computed against the *latent* cache directly:
+        q_abs = q_nope · W_uk          (B,S,H,R)
+        s     = q_abs · c_kvᵀ + q_rope · k_ropeᵀ
+        o     = (softmax(s) · c_kv) · W_uv
+    No (B,L,H,·) K/V expansion ⇒ cache-side HBM traffic drops from
+    H·(nd+vd) to R+rd per cached token — the §Perf hillclimb for the MLA
+    decode cells."""
+    B, S, D = x.shape
+    H, nd, rd, vd, R = (num_heads, nope_head_dim, rope_head_dim,
+                        v_head_dim, kv_lora_rank)
+    scale = 1.0 / math.sqrt(nd + rd)
+
+    q_nope, q_rope = _project_q(p, x, H, nd, rd, positions, rope_theta)
+    c_kv_new, k_rope_new = _project_kv_latent(p, x, R, rd, positions,
+                                              rope_theta)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], c_kv_new.astype(cache["ckv"].dtype), cache_pos, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], k_rope_new.astype(cache["krope"].dtype),
+        cache_pos, axis=1)
+    new_cache = {"ckv": ckv, "krope": krope}
+
+    wkv_b = p["wkv_b"]["w"].reshape(R, H, nd + vd)
+    w_uk = wkv_b[..., :nd]                                  # (R,H,nd)
+    w_uv = wkv_b[..., nd:]                                  # (R,H,vd)
+
+    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    s_nope = jnp.einsum("bqhr,bkr->bhqk", q_abs,
+                        ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                        krope.astype(jnp.float32))
+    s = (s_nope + s_rope) * scale
+
+    Skv = ckv.shape[1]
+    k_pos = jnp.arange(Skv)[None, :]
+    q_pos = jnp.arange(S)[:, None] + cache_pos
+    mask = (k_pos <= q_pos) & (k_pos < cache_pos + S)
+    s = jnp.where(mask[None, None], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    o_latent = jnp.einsum("bhqk,bkr->bqhr", probs, ckv.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhv->bqhv", o_latent, w_uv.astype(jnp.float32))
+    y = dense(p["wo"], out.reshape(B, S, H * vd).astype(x.dtype))
+    return y, new_cache

@@ -1,0 +1,253 @@
+"""Mixture-of-Experts layer with capacity-bucketed sort dispatch.
+
+The Lachesis connection (DESIGN §4): token→expert dispatch is *hash
+partitioning by a learned key* — the router is the partitioner candidate
+``f_keyProj``, the all-to-all is the shuffle, and expert-parallel placement
+is the persistent partitioning.  The dispatch below is the sort/scatter
+formulation (right FLOP count, unlike dense one-hot dispatch): scatter
+tokens into an (E, C, D) buffer, grouped-matmul per expert, gather back.
+Under EP sharding (experts on the "model" axis, tokens on "data"), XLA
+lowers the scatter/gather into the expected all-to-all pair.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..pjit_utils import constrain
+from .layers import Params, dense, dense_init, ffn, ffn_init
+
+
+def moe_init(key, d_model: int, d_ff_expert: int, num_experts: int,
+             num_shared: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d_model)
+    p = {
+        "router": dense_init(ks[0], d_model, num_experts, jnp.float32),
+        # experts stacked on a leading E axis → shardable over "model"
+        "w_in": (jax.random.normal(ks[1], (num_experts, d_model, d_ff_expert),
+                                   jnp.float32) * scale).astype(dtype),
+        "w_gate": (jax.random.normal(ks[2], (num_experts, d_model, d_ff_expert),
+                                     jnp.float32) * scale).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (num_experts, d_ff_expert, d_model),
+                                    jnp.float32) / math.sqrt(d_ff_expert)
+                  ).astype(dtype),
+    }
+    if num_shared > 0:
+        p["shared"] = ffn_init(jax.random.fold_in(key, 99), d_model,
+                               d_ff_expert * num_shared, dtype)
+    return p
+
+
+def capacity(tokens: int, num_experts: int, top_k: int,
+             factor: float = 1.25) -> int:
+    c = int(math.ceil(tokens * top_k / num_experts * factor))
+    return max(8, -(-c // 8) * 8)   # round up to 8 for lane alignment
+
+
+def moe_ffn(p: Params, x: jax.Array, *, num_experts: int, top_k: int,
+            capacity_factor: float = 1.25, activation: str = "silu",
+            router_noise: float = 0.0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) → (B, S, D), plus aux metrics (load-balance loss terms).
+
+    Under SPMD (dry-run / distributed training) this routes through the
+    shard_map implementation below — local dispatch + explicit all-to-all
+    over the "model" (expert) axis, the paper's shuffle made explicit.
+    The single-device path keeps the global scatter formulation (oracle)."""
+    from ..pjit_utils import spmd_enabled
+    if spmd_enabled():
+        return moe_ffn_shard_map(p, x, num_experts=num_experts, top_k=top_k,
+                                 capacity_factor=capacity_factor,
+                                 activation=activation)
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = dense(p["router"], xt.astype(jnp.float32))          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)          # (T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True),
+                                     1e-9)                        # renorm
+
+    C = capacity(T, num_experts, top_k, capacity_factor)
+
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(expert_idx, num_experts,
+                            dtype=jnp.int32)                      # (T,k,E)
+    flat_oh = onehot.reshape(T * top_k, num_experts)
+    pos_in_expert = (jnp.cumsum(flat_oh, axis=0) - flat_oh)       # (T*k, E)
+    pos = (pos_in_expert * flat_oh).sum(-1).reshape(T, top_k)     # (T,k)
+    keep = pos < C                                                # drop overflow
+
+    # dispatch: scatter token rows into (E, C, D)
+    e_flat = expert_idx.reshape(-1)
+    p_flat = jnp.where(keep, pos, C - 1).reshape(-1)
+    k_flat = keep.reshape(-1)
+    src = jnp.repeat(xt, top_k, axis=0) * k_flat[:, None].astype(x.dtype)
+    buf = jnp.zeros((num_experts, C, D), x.dtype)
+    buf = buf.at[e_flat, p_flat].add(src)
+    # expert-parallel placement: the all-to-all XLA inserts here IS the
+    # "shuffle" Lachesis reasons about (DESIGN §4)
+    buf = constrain(buf, P("model", None, None))
+
+    # grouped expert FFN: (E,C,D) @ (E,D,F)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    h = act(g) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_out"])           # (E,C,D)
+
+    # combine: gather back and weight by gate
+    gathered = out_buf[e_flat, p_flat]                            # (T*k, D)
+    gathered = gathered * (gate_vals.reshape(-1)[:, None]
+                           * k_flat[:, None]).astype(x.dtype)
+    y = gathered.reshape(T, top_k, D).sum(axis=1)
+
+    if "shared" in p:
+        y = y + ffn(p["shared"], xt, activation)
+
+    # aux: load-balance loss (Switch-style) + drop fraction
+    me = probs.mean(axis=0)                                       # (E,)
+    ce = (onehot.sum(axis=1).astype(jnp.float32)).mean(axis=0)    # (E,)
+    aux = {
+        "load_balance_loss": num_experts * jnp.sum(me * ce) / top_k,
+        "dropped_frac": 1.0 - keep.astype(jnp.float32).mean(),
+    }
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map implementation: local dispatch + explicit all-to-all (EP)
+# ---------------------------------------------------------------------------
+
+def _local_dispatch(xt, logits, num_experts, top_k, C, dtype):
+    """Per-device dispatch: scatter local tokens into (E, C, D)."""
+    T, D = xt.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(expert_idx, num_experts, dtype=jnp.int32)
+    flat_oh = onehot.reshape(T * top_k, num_experts)
+    pos_in_expert = jnp.cumsum(flat_oh, axis=0) - flat_oh
+    pos = (pos_in_expert * flat_oh).sum(-1).reshape(T, top_k)
+    keep = pos < C
+    e_flat = expert_idx.reshape(-1)
+    p_flat = jnp.where(keep, pos, C - 1).reshape(-1)
+    k_flat = keep.reshape(-1)
+    src = jnp.repeat(xt, top_k, axis=0) * k_flat[:, None].astype(dtype)
+    buf = jnp.zeros((num_experts, C, D), dtype)
+    buf = buf.at[e_flat, p_flat].add(src)
+    return buf, (e_flat, p_flat, k_flat, gate_vals, probs, onehot)
+
+
+def moe_ffn_shard_map(p: Params, x: jax.Array, *, num_experts: int,
+                      top_k: int, capacity_factor: float,
+                      activation: str) -> Tuple[jax.Array, Dict]:
+    """Expert-parallel MoE: tokens stay batch-sharded, experts live on the
+    "model" axis; dispatch is device-local, the exchange is one explicit
+    all-to-all each way (forward + transposed in backward)."""
+    from jax.experimental.shard_map import shard_map
+
+    mesh = jax.sharding.get_abstract_mesh()
+    axis_sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    mp = axis_sizes.get("model", 1)
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    dp_spec = dp_axes if len(dp_axes) != 1 else dp_axes[0]
+    E = num_experts
+    E_loc = E // mp
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+
+    # sequence-sharded dispatch: tokens split over the model axis too, so
+    # every (data, model) rank dispatches DISTINCT tokens — without this the
+    # replicated-x dispatch does mp× redundant expert compute.
+    S_total = x.shape[1]
+    seq_shard = mp > 1 and S_total % mp == 0
+    # decode (B=1 or tiny): batch may not divide the DP axes — replicate
+    import math as _math
+    dp_size = _math.prod(axis_sizes[a] for a in dp_axes) if dp_axes else 1
+    if x.shape[0] % max(dp_size, 1) != 0:
+        dp_spec = None
+
+    def local_fn(router, w_in, w_gate, w_out, shared, xl):
+        B_loc, S, D = xl.shape
+        T = B_loc * S
+        xt = xl.reshape(T, D)
+        logits = dense(router, xt.astype(jnp.float32))
+        C = capacity(T, E, top_k, capacity_factor)
+        buf, (e_flat, p_flat, k_flat, gate_vals, probs, onehot) = \
+            _local_dispatch(xt, logits, E, top_k, C, xl.dtype)
+
+        # exchange: (E, C, D) → (E_loc, C·mp, D) over the model axis
+        if mp > 1:
+            buf = jax.lax.all_to_all(buf, "model", split_axis=0,
+                                     concat_axis=1, tiled=True)
+        h = jnp.einsum("ecd,edf->ecf", buf, w_in)
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        out_buf = jnp.einsum("ecf,efd->ecd", act(g) * h, w_out)
+        if mp > 1:
+            out_buf = jax.lax.all_to_all(out_buf, "model", split_axis=1,
+                                         concat_axis=0, tiled=True)
+
+        gathered = out_buf[e_flat, p_flat]
+        gathered = gathered * (gate_vals.reshape(-1)[:, None]
+                               * k_flat[:, None]).astype(xl.dtype)
+        y = gathered.reshape(T, top_k, D).sum(axis=1)
+
+        if shared is not None:
+            # TP shared expert: local d_ff slice, psum the partial output
+            y_sh = ffn(shared, xt, activation)
+            y = y + jax.lax.psum(y_sh, "model")
+
+        me = probs.mean(axis=0)
+        ce = onehot.sum(axis=1).astype(jnp.float32).mean(axis=0)
+        aux_lb = E * jnp.sum(me * ce) / top_k
+        aux_drop = 1.0 - k_flat.astype(jnp.float32).mean()
+        aux = jnp.stack([aux_lb, aux_drop])
+        for a in dp_axes:
+            aux = jax.lax.pmean(aux, a)
+        if seq_shard:
+            aux = jax.lax.pmean(aux, "model")
+        return y.reshape(B_loc, S, D), aux
+
+    shared = p.get("shared")
+    shared_specs = None
+    if shared is not None:
+        # TP layout for the shared expert: d_ff sliced over "model"
+        shared_specs = {"w_in": {"w": P(None, "model")},
+                        "w_gate": {"w": P(None, "model")},
+                        "w_out": {"w": P("model", None)}}
+    x_spec = (P(dp_spec, "model", None) if seq_shard
+              else P(dp_spec, None, None))
+    if shared is not None and seq_shard:
+        # shared expert sees only the local sequence slice; its psum over
+        # "model" would double-count — run it unsharded instead
+        shared_specs = {"w_in": {"w": P(None, None)},
+                        "w_gate": {"w": P(None, None)},
+                        "w_out": {"w": P(None, None)}}
+    in_specs = (
+        P(),                                  # router replicated
+        P("model", None, None), P("model", None, None),
+        P("model", None, None),               # experts on model axis
+        shared_specs,
+        x_spec,                               # tokens over data (+model)
+    )
+    out_specs = (x_spec, P())
+
+    def local_fn_wrapped(router, w_in, w_gate, w_out, shared_l, xl):
+        if shared_l is not None and seq_shard:
+            # unsharded shared expert on the local slice (no psum)
+            y, aux = local_fn(router, w_in, w_gate, w_out, None, xl)
+            y = y + ffn(shared_l, xl.reshape(-1, xl.shape[-1]),
+                        activation).reshape(xl.shape)
+            return y, aux
+        return local_fn(router, w_in, w_gate, w_out, shared_l, xl)
+
+    fn = shard_map(local_fn_wrapped, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    y, aux = fn(p["router"], p["w_in"], p["w_gate"], p["w_out"], shared, x)
+    return y, {"load_balance_loss": aux[0], "dropped_frac": aux[1]}

@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-gated linear recurrent unit:
+    r_t = σ(W_r x_t);  i_t = σ(W_i x_t)
+    a_t = a^{c·r_t}    (a = σ(Λ) learned, c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+TPU adaptation: the sequential recurrence is computed with
+``jax.lax.associative_scan`` (log-depth) — the linear recurrence composes as
+(a₂a₁, a₂b₁ + b₂).  Decode is a single elementwise update: the entire
+recurrent "cache" is one (B, width) vector, which is why this hybrid runs
+the 500k-context shape where full-attention archs cannot.
+
+Block structure (Griffin): conv1d(width 4) → RG-LRU, gated by a parallel
+GeLU branch, then output projection.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, dense_init
+
+RGLRU_C = 8.0
+
+
+def rglru_init(key, d_model: int, *, width: int, conv_width: int,
+               dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = exp(-c·softplus(Λ)) ∈ (0.9, 0.999) at r=1
+    u = jax.random.uniform(ks[0], (width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))
+    return {
+        "in_x": dense_init(ks[1], d_model, width, dtype),
+        "in_gate": dense_init(ks[2], d_model, width, dtype),
+        "conv_w": (jax.random.normal(ks[3], (conv_width, width), jnp.float32)
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_r": dense_init(ks[4], width, width, dtype),
+        "w_i": dense_init(ks[5], width, width, dtype),
+        "lam": lam,
+        "out": dense_init(jax.random.fold_in(key, 9), width, d_model, dtype),
+    }
+
+
+def _rglru_coeffs(p: Params, x: jax.Array):
+    """Per-step (a_t, b_t) of the linear recurrence, in fp32."""
+    r = jax.nn.sigmoid(dense(p["w_r"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_i"], x).astype(jnp.float32))
+    log_a = -RGLRU_C * r * jax.nn.softplus(p["lam"])   # log a_t  (≤ 0)
+    a = jnp.exp(log_a)
+    gated = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * gated
+    return a, b
+
+
+def rglru_scan(p: Params, x: jax.Array,
+               h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,T,W) → (y: (B,T,W), h_final: (B,W)).  Log-depth scan."""
+    a, b = _rglru_coeffs(p, x)
+    if h0 is not None:
+        # fold h0 in as a virtual step 0: b_0 = h0, a_0 = 1
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1].astype(x.dtype)
+
+
+def rglru_step(p: Params, x: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step: x (B,1,W), h (B,W)."""
+    a, b = _rglru_coeffs(p, x)
+    new_h = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return new_h.astype(x.dtype)[:, None], new_h.astype(h.dtype)
+
+
+def _causal_conv1d(x, w, b, hist: Optional[jax.Array] = None):
+    W = w.shape[0]
+    if hist is None:
+        pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        pads = jnp.concatenate([hist, x], axis=1)
+    out = sum(pads[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b, pads[:, -(W - 1):]
+
+
+def rglru_block(p: Params, x: jax.Array, *,
+                state: Optional[Dict[str, jax.Array]] = None,
+                return_final_state: bool = False
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Griffin recurrent block.  x: (B,T,D).
+
+    state = {"h": (B,W), "conv": (B,conv_width-1,W)} for decode."""
+    gate = jax.nn.gelu(dense(p["in_gate"], x))
+    xr = dense(p["in_x"], x)
+    if state is None:
+        conv, tail = _causal_conv1d(xr, p["conv_w"], p["conv_b"])
+        y, h_final = rglru_scan(p, conv)
+        new_state = ({"h": h_final, "conv": tail.astype(xr.dtype)}
+                     if return_final_state else None)
+    else:
+        conv, tail = _causal_conv1d(xr, p["conv_w"], p["conv_b"],
+                                    hist=state["conv"])
+        y, h_final = rglru_step(p, conv, state["h"])
+        new_state = {"h": h_final, "conv": tail.astype(xr.dtype)}
+    return dense(p["out"], y * gate), new_state
+
+
+def rglru_state_shape(B: int, width: int, conv_width: int,
+                      dtype) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {"h": jax.ShapeDtypeStruct((B, width), dtype),
+            "conv": jax.ShapeDtypeStruct((B, conv_width - 1, width), dtype)}

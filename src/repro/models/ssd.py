@@ -1,0 +1,177 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: within a chunk the recurrence is computed as a
+masked attention-like quadratic form (the "duality"); across chunks a
+linear scan carries the (H, P, N) state.  This is the TPU-native layout:
+chunk matmuls hit the MXU, the cross-chunk scan is O(T/chunk) sequential.
+
+Decode maintains the recurrent state directly:  h ← dA·h + dt·B⊗x,
+y = C·h + D·x  — no KV cache at all (the long_500k story for this arch).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+def ssd_init(key, d_model: int, *, d_inner: int, state: int, nheads: int,
+             conv_width: int, dtype) -> Params:
+    ks = jax.random.split(key, 5)
+    headdim = d_inner // nheads
+    d_in_proj = 2 * d_inner + 2 * state + nheads   # z, x, B, C, dt
+    p = {
+        "in_proj": dense_init(ks[0], d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_width, d_inner + 2 * state),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((d_inner + 2 * state,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype),
+    }
+    return p
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B,T,C); w: (W,C) depthwise causal conv."""
+    W = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise sums: L[..., i, j] = Σ_{j<k≤i} log_a[k]."""
+    T = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, chunk: int,
+                 init_state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  x: (B,T,H,P); dt: (B,T,H); A: (H,) (negative);
+    Bm/Cm: (B,T,N).  Returns (y: (B,T,H,P), final_state: (B,H,P,N)).
+
+    One ``lax.scan`` over chunks: only a single chunk's (H, L, L) decay tile
+    is live at a time (matches the Pallas kernel's VMEM footprint; the
+    all-chunks-at-once formulation needs O(T·L) memory and OOMs at 4k+)."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = T // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bsz, nc, chunk, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    h0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), jnp.float32))
+
+    def body(h, inp):
+        xi, dti, bi, ci = inp          # (B,L,H,P),(B,L,H),(B,L,N),(B,L,N)
+        dti = dti.astype(jnp.float32)
+        dA = dti * A                                              # (B,L,H)
+        cs = jnp.cumsum(dA, axis=1)
+        # intra-chunk quadratic form
+        Lm = jnp.exp(_segsum(dA.transpose(0, 2, 1)))              # (B,H,L,L)
+        scores = jnp.einsum("bln,bmn->blm", ci.astype(jnp.float32),
+                            bi.astype(jnp.float32))
+        y = jnp.einsum("blm,bhlm,bmh,bmhp->blhp", scores, Lm, dti,
+                       xi.astype(jnp.float32))
+        # inter-chunk contribution from the carried state
+        y = y + jnp.einsum("bln,blh,bhpn->blhp", ci.astype(jnp.float32),
+                           jnp.exp(cs), h)
+        # state update
+        decay_states = jnp.exp(cs[:, -1:, :] - cs) * dti          # (B,L,H)
+        upd = jnp.einsum("bln,blh,blhp->bhpn", bi.astype(jnp.float32),
+                         decay_states, xi.astype(jnp.float32))
+        h = h * jnp.exp(cs[:, -1])[..., None, None] + upd
+        return h, y.astype(x.dtype)
+
+    h_final, ys = jax.lax.scan(body, h0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, T, H, P)
+    return y, h_final.astype(x.dtype)
+
+
+def ssd_block(p: Params, x: jax.Array, *, d_inner: int, state: int,
+              nheads: int, chunk: int,
+              rec_state: Optional[Dict[str, jax.Array]] = None,
+              return_final_state: bool = False
+              ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full Mamba-2 mixer.  x: (B,T,D).
+
+    Training: rec_state=None, chunked scan over T.
+    Prefill:  rec_state=None, return_final_state=True → returns decode state.
+    Decode: rec_state = {"h": (B,H,P,N), "conv": (B,W-1,Cconv)}; T must be 1.
+    """
+    B, T, D = x.shape
+    P = d_inner // nheads
+    zxbcdt = dense(p["in_proj"], x)
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + state,
+                 2 * d_inner + 2 * state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,T,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    if rec_state is None:
+        conv_out = _causal_conv1d(conv_in, p["conv_w"], p["conv_b"])
+        new_state = None
+    else:
+        W = p["conv_w"].shape[0]
+        hist = jnp.concatenate([rec_state["conv"], conv_in], axis=1)
+        conv_out = sum(hist[:, i:i + T] * p["conv_w"][i] for i in range(W))
+        conv_out = jax.nn.silu(conv_out + p["conv_b"])
+        new_conv = hist[:, -(W - 1):]
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + state], axis=-1)
+    xh = xin.reshape(B, T, nheads, P)
+
+    if rec_state is None:
+        # pad T to a chunk multiple; padded steps have dt=0 ⇒ no state change
+        T_pad = -(-T // chunk) * chunk
+        if T_pad != T:
+            pad = ((0, 0), (0, T_pad - T))
+            xh = jnp.pad(xh, pad + ((0, 0), (0, 0)))
+            dt = jnp.pad(dt, pad + ((0, 0),))
+            Bm = jnp.pad(Bm, pad + ((0, 0),))
+            Cm = jnp.pad(Cm, pad + ((0, 0),))
+        y, final = ssd_scan_ref(xh, dt, A, Bm, Cm, chunk)
+        y, xh = y[:, :T], xh[:, :T]
+        if return_final_state:
+            W = p["conv_w"].shape[0]
+            new_state = {"h": final,
+                         "conv": conv_in[:, -(W - 1):].astype(conv_in.dtype)}
+    else:
+        # single-token recurrent update
+        dA = jnp.exp(dt[:, 0] * A)                                # (B,H)
+        h = rec_state["h"].astype(jnp.float32)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0],
+                         xh[:, 0].astype(jnp.float32),
+                         Bm[:, 0].astype(jnp.float32))
+        h = h * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+        y = y[:, None].reshape(B, 1, nheads, P).astype(x.dtype)
+        new_state = {"h": h.astype(rec_state["h"].dtype), "conv": new_conv}
+
+    y = y + (p["D"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B, T, d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return dense(p["out_proj"], y), new_state
+
+
+def ssd_state_shape(B: int, d_inner: int, state: int, nheads: int,
+                    conv_width: int, dtype) -> Dict[str, jax.ShapeDtypeStruct]:
+    P = d_inner // nheads
+    return {"h": jax.ShapeDtypeStruct((B, nheads, P, state), dtype),
+            "conv": jax.ShapeDtypeStruct((B, conv_width - 1,
+                                          d_inner + 2 * state), dtype)}

@@ -1,0 +1,573 @@
+"""Config-driven model: one implementation covering all 10 architectures.
+
+The layer stack is a ``lax.scan`` over pattern groups (compile time flat in
+depth), with optional unrolled prefix/tail layers.  Three modes share the
+layer dispatcher:
+
+* ``train``   — full-sequence forward, no caches, remat over groups
+* ``prefill`` — full-sequence forward that also *emits* the decode cache
+* ``decode``  — single-token step updating the cache in place
+
+Cache kinds per mixer: attention → KV (optionally ring-buffered for local
+layers), MLA → compressed latent, SSD/RG-LRU → recurrent state.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, LayerSpec
+from . import layers as L
+from . import mla as MLA
+from . import moe as MOE
+from . import rglru as RG
+from . import ssd as SSD
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+
+def _init_layer(cfg: ArchConfig, spec: LayerSpec, key,
+                cross_attention: bool = False) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    if spec.mixer == "attn":
+        p["ln_attn"] = L.norm_init(cfg.norm, cfg.d_model, dt)
+        p["attn"] = L.attention_init(ks[0], cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, cfg.head_dim, dt,
+                                     qkv_bias=cfg.qkv_bias,
+                                     qk_norm=cfg.qk_norm)
+        if cfg.use_post_norm:
+            p["ln_attn_post"] = L.norm_init(cfg.norm, cfg.d_model, dt)
+    elif spec.mixer == "mla":
+        m = cfg.mla
+        p["ln_attn"] = L.norm_init(cfg.norm, cfg.d_model, dt)
+        p["attn"] = MLA.mla_init(ks[0], cfg.d_model, cfg.num_heads,
+                                 kv_lora_rank=m.kv_lora_rank,
+                                 q_lora_rank=m.q_lora_rank,
+                                 nope_head_dim=m.nope_head_dim,
+                                 rope_head_dim=m.rope_head_dim,
+                                 v_head_dim=m.v_head_dim, dtype=dt)
+    elif spec.mixer == "ssd":
+        s = cfg.ssd
+        p["ln_attn"] = L.norm_init(cfg.norm, cfg.d_model, dt)
+        p["attn"] = SSD.ssd_init(ks[0], cfg.d_model, d_inner=s.d_inner,
+                                 state=s.state, nheads=s.nheads,
+                                 conv_width=s.conv_width, dtype=dt)
+    elif spec.mixer == "rglru":
+        r = cfg.rglru
+        p["ln_attn"] = L.norm_init(cfg.norm, cfg.d_model, dt)
+        p["attn"] = RG.rglru_init(ks[0], cfg.d_model, width=r.width,
+                                  conv_width=r.conv_width, dtype=dt)
+
+    if cross_attention:
+        p["ln_cross"] = L.norm_init(cfg.norm, cfg.d_model, dt)
+        p["cross"] = L.attention_init(ks[1], cfg.d_model, cfg.num_heads,
+                                      cfg.num_kv_heads, cfg.head_dim, dt)
+
+    if spec.ffn == "dense":
+        p["ln_ffn"] = L.norm_init(cfg.norm, cfg.d_model, dt)
+        p["ffn"] = L.ffn_init(ks[2], cfg.d_model, cfg.d_ff, dt,
+                              gated=cfg.ffn_gated)
+        if cfg.use_post_norm:
+            p["ln_ffn_post"] = L.norm_init(cfg.norm, cfg.d_model, dt)
+    elif spec.ffn == "moe":
+        m = cfg.moe
+        p["ln_ffn"] = L.norm_init(cfg.norm, cfg.d_model, dt)
+        p["ffn"] = MOE.moe_init(ks[2], cfg.d_model, m.d_ff_expert,
+                                m.num_experts, m.num_shared, dt)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": L.embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": L.norm_init(cfg.norm, cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.embed_init(keys[1], cfg.padded_vocab,
+                                         cfg.d_model, dt)
+    if cfg.positional == "learned":
+        params["pos_embed"] = (jax.random.normal(
+            keys[2], (cfg.max_learned_pos, cfg.d_model), jnp.float32)
+            * 0.01).astype(dt)
+
+    cross = cfg.encoder is not None
+    # scanned groups: per-slot params stacked over G
+    G = cfg.pattern_groups
+    blocks: Params = {}
+    for s, spec in enumerate(cfg.pattern):
+        slot_keys = jax.random.split(jax.random.fold_in(keys[3], s), G)
+        blocks[f"s{s}"] = jax.vmap(
+            lambda k: _init_layer(cfg, spec, k, cross))(slot_keys)
+    params["blocks"] = blocks
+    for i, spec in enumerate(cfg.prefix):
+        params[f"prefix{i}"] = _init_layer(cfg, spec,
+                                           jax.random.fold_in(keys[4], i),
+                                           cross)
+    for i, spec in enumerate(cfg.tail_specs):
+        params[f"tail{i}"] = _init_layer(cfg, spec,
+                                         jax.random.fold_in(keys[5], i),
+                                         cross)
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        enc_spec = LayerSpec(mixer="attn", attn_kind="global",
+                             use_rope=False, ffn="dense")
+        enc_keys = jax.random.split(keys[6], e.num_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(
+                lambda k: _init_layer(cfg, enc_spec, k, False))(enc_keys),
+            "norm": L.norm_init(cfg.norm, cfg.d_model, dt),
+        }
+    return params
+
+
+# ===========================================================================
+# Cache init
+# ===========================================================================
+
+def _layer_cache_shape(cfg: ArchConfig, spec: LayerSpec, B: int, Lc: int,
+                       dtype) -> Optional[Dict]:
+    if spec.mixer == "attn":
+        length = Lc
+        if spec.attn_kind == "local" and cfg.windowed_local_cache:
+            length = min(Lc, cfg.sliding_window)
+        kv = (B, length, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+    if spec.mixer == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((B, Lc, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((B, Lc, m.rope_head_dim), dtype)}
+    if spec.mixer == "ssd":
+        s = cfg.ssd
+        P = s.d_inner // s.nheads
+        return {"h": jnp.zeros((B, s.nheads, P, s.state), dtype),
+                "conv": jnp.zeros((B, s.conv_width - 1,
+                                   s.d_inner + 2 * s.state), dtype)}
+    if spec.mixer == "rglru":
+        r = cfg.rglru
+        return {"h": jnp.zeros((B, r.width), dtype),
+                "conv": jnp.zeros((B, r.conv_width - 1, r.width), dtype)}
+    return None
+
+
+def init_cache(cfg: ArchConfig, B: int, Lc: int) -> Params:
+    dt = _dtype(cfg)
+    G = cfg.pattern_groups
+    cache: Params = {"blocks": {}}
+    for s, spec in enumerate(cfg.pattern):
+        one = _layer_cache_shape(cfg, spec, B, Lc, dt)
+        cache["blocks"][f"s{s}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (G,) + x.shape), one)
+    for i, spec in enumerate(cfg.prefix):
+        cache[f"prefix{i}"] = _layer_cache_shape(cfg, spec, B, Lc, dt)
+    for i, spec in enumerate(cfg.tail_specs):
+        cache[f"tail{i}"] = _layer_cache_shape(cfg, spec, B, Lc, dt)
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        kv = (B, e.num_frames, cfg.num_kv_heads, cfg.head_dim)
+        cache["cross"] = {
+            "k": jnp.zeros((cfg.num_layers,) + kv, dt),
+            "v": jnp.zeros((cfg.num_layers,) + kv, dt)}
+    return cache
+
+
+# ===========================================================================
+# Layer application
+# ===========================================================================
+
+def _apply_mixer(cfg: ArchConfig, spec: LayerSpec, p: Params, x, *,
+                 positions, mode: str, cache, cache_pos):
+    """Returns (y, new_cache)."""
+    window = cfg.sliding_window if spec.attn_kind == "local" else None
+    ring = (spec.mixer == "attn" and spec.attn_kind == "local"
+            and cfg.windowed_local_cache)
+    if spec.mixer == "attn":
+        if mode == "train":
+            y, _ = L.attention_block(
+                p["attn"], x, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                positions=positions, use_rope=(cfg.positional == "rope"
+                                               and spec.use_rope),
+                rope_theta=cfg.rope_theta, window=window,
+                attn_softcap=cfg.attn_softcap, scale=cfg.attn_scale)
+            return y, None
+        if mode == "prefill":
+            return _attn_prefill(cfg, spec, p, x, positions, cache, ring,
+                                 window)
+        # decode
+        if ring:
+            return _attn_decode_ring(cfg, p, x, positions, cache, cache_pos)
+        y, nc = L.attention_block(
+            p["attn"], x, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+            positions=positions, use_rope=(cfg.positional == "rope"
+                                           and spec.use_rope),
+            rope_theta=cfg.rope_theta, window=window,
+            attn_softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+            kv_cache=cache, cache_pos=cache_pos)
+        return y, nc
+    if spec.mixer == "mla":
+        m = cfg.mla
+        if cfg.mla_absorbed and mode == "decode":
+            y, nc = MLA.mla_attention_absorbed(
+                p["attn"], x, num_heads=cfg.num_heads,
+                kv_lora_rank=m.kv_lora_rank, nope_head_dim=m.nope_head_dim,
+                rope_head_dim=m.rope_head_dim, v_head_dim=m.v_head_dim,
+                rope_theta=cfg.rope_theta, positions=positions,
+                cache=cache, cache_pos=cache_pos)
+            return y, nc
+        y, nc = MLA.mla_attention(
+            p["attn"], x, num_heads=cfg.num_heads,
+            kv_lora_rank=m.kv_lora_rank, nope_head_dim=m.nope_head_dim,
+            rope_head_dim=m.rope_head_dim, v_head_dim=m.v_head_dim,
+            rope_theta=cfg.rope_theta, positions=positions,
+            cache=cache if mode != "train" else None,
+            cache_pos=cache_pos if mode != "train" else None)
+        return y, nc
+    if spec.mixer == "ssd":
+        s = cfg.ssd
+        y, nc = SSD.ssd_block(p["attn"], x, d_inner=s.d_inner, state=s.state,
+                              nheads=s.nheads, chunk=s.chunk,
+                              rec_state=cache if mode == "decode" else None,
+                              return_final_state=(mode == "prefill"))
+        return y, nc
+    if spec.mixer == "rglru":
+        y, nc = RG.rglru_block(p["attn"], x,
+                               state=cache if mode == "decode" else None,
+                               return_final_state=(mode == "prefill"))
+        return y, nc
+    raise ValueError(spec.mixer)
+
+
+def _attn_prefill(cfg, spec, p, x, positions, cache, ring, window):
+    """Full-sequence attention that also emits the decode cache."""
+    use_rope = cfg.positional == "rope" and spec.use_rope
+    q = L._split_heads(L.dense(p["attn"]["wq"], x), cfg.num_heads, cfg.head_dim)
+    k = L._split_heads(L.dense(p["attn"]["wk"], x), cfg.num_kv_heads, cfg.head_dim)
+    v = L._split_heads(L.dense(p["attn"]["wv"], x), cfg.num_kv_heads, cfg.head_dim)
+    if "q_norm" in p["attn"]:
+        q = L.rmsnorm(p["attn"]["q_norm"], q)
+        k = L.rmsnorm(p["attn"]["k_norm"], k)
+    if use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    out = L.auto_sdpa(q, k, v, causal=True, window=window,
+                      attn_softcap=cfg.attn_softcap, scale=cfg.attn_scale)
+    y = L.dense(p["attn"]["wo"],
+                out.reshape(out.shape[:2] + (cfg.num_heads * cfg.head_dim,)))
+    S = x.shape[1]
+    if ring:
+        W = cache["k"].shape[1]
+        if S >= W:
+            pos_tail = jnp.arange(S - W, S)
+            slots = pos_tail % W
+            nk = jnp.zeros_like(cache["k"]).at[:, slots].set(
+                k[:, S - W:].astype(cache["k"].dtype))
+            nv = jnp.zeros_like(cache["v"]).at[:, slots].set(
+                v[:, S - W:].astype(cache["v"].dtype))
+        else:
+            nk = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            nv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        return y, {"k": nk, "v": nv}
+    nk = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+    nv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+    return y, {"k": nk, "v": nv}
+
+
+def _attn_decode_ring(cfg, p, x, positions, cache, cache_pos):
+    """Single-token decode against a ring-buffered local window cache."""
+    use_rope = cfg.positional == "rope"
+    q = L._split_heads(L.dense(p["attn"]["wq"], x), cfg.num_heads, cfg.head_dim)
+    k = L._split_heads(L.dense(p["attn"]["wk"], x), cfg.num_kv_heads, cfg.head_dim)
+    v = L._split_heads(L.dense(p["attn"]["wv"], x), cfg.num_kv_heads, cfg.head_dim)
+    if "q_norm" in p["attn"]:
+        q = L.rmsnorm(p["attn"]["q_norm"], q)
+        k = L.rmsnorm(p["attn"]["k_norm"], k)
+    if use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    W = cache["k"].shape[1]
+    slot = cache_pos % W
+    nk = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                             k.astype(cache["k"].dtype),
+                                             slot, axis=1)
+    nv = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                             v.astype(cache["v"].dtype),
+                                             slot, axis=1)
+    valid = jnp.minimum(cache_pos + 1, W)
+    out = L.sdpa(q, nk, nv, causal=False, attn_softcap=cfg.attn_softcap,
+                 scale=cfg.attn_scale, kv_len=valid)
+    y = L.dense(p["attn"]["wo"],
+                out.reshape(out.shape[:2] + (cfg.num_heads * cfg.head_dim,)))
+    return y, {"k": nk, "v": nv}
+
+
+def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: Params, x, *,
+                 positions, mode: str, cache=None, cache_pos=None,
+                 enc_out=None, cross_cache=None):
+    """One transformer block.  Returns (x, new_cache, new_cross_cache, aux)."""
+    h = L.norm_apply(cfg.norm, p["ln_attn"], x)
+    y, new_cache = _apply_mixer(cfg, spec, p, h, positions=positions,
+                                mode=mode, cache=cache, cache_pos=cache_pos)
+    if cfg.use_post_norm:
+        y = L.norm_apply(cfg.norm, p["ln_attn_post"], y)
+    x = x + y
+
+    new_cross = None
+    if "cross" in p:
+        h = L.norm_apply(cfg.norm, p["ln_cross"], x)
+        if mode == "decode" and cross_cache is not None:
+            out = L.sdpa(L._split_heads(L.dense(p["cross"]["wq"], h),
+                                        cfg.num_heads, cfg.head_dim),
+                         cross_cache["k"], cross_cache["v"], causal=False)
+            y = L.dense(p["cross"]["wo"],
+                        out.reshape(out.shape[:2]
+                                    + (cfg.num_heads * cfg.head_dim,)))
+            new_cross = cross_cache
+        else:
+            k = L._split_heads(L.dense(p["cross"]["wk"], enc_out),
+                               cfg.num_kv_heads, cfg.head_dim)
+            v = L._split_heads(L.dense(p["cross"]["wv"], enc_out),
+                               cfg.num_kv_heads, cfg.head_dim)
+            q = L._split_heads(L.dense(p["cross"]["wq"], h),
+                               cfg.num_heads, cfg.head_dim)
+            out = L.auto_sdpa(q, k, v, causal=False)
+            y = L.dense(p["cross"]["wo"],
+                        out.reshape(out.shape[:2]
+                                    + (cfg.num_heads * cfg.head_dim,)))
+            if mode == "prefill":
+                new_cross = {"k": k, "v": v}
+        x = x + y
+
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn == "dense":
+        h = L.norm_apply(cfg.norm, p["ln_ffn"], x)
+        y = L.ffn(p["ffn"], h, cfg.ffn_activation)
+        if cfg.use_post_norm:
+            y = L.norm_apply(cfg.norm, p["ln_ffn_post"], y)
+        x = x + y
+    elif spec.ffn == "moe":
+        m = cfg.moe
+        h = L.norm_apply(cfg.norm, p["ln_ffn"], x)
+        y, moe_aux = MOE.moe_ffn(
+            p["ffn"], h, num_experts=m.num_experts, top_k=m.top_k,
+            capacity_factor=m.capacity_factor,
+            activation=cfg.ffn_activation)
+        aux = moe_aux["load_balance_loss"]
+        x = x + y
+    return x, new_cache, new_cross, aux
+
+
+# ===========================================================================
+# Full forward passes
+# ===========================================================================
+
+def _encoder_forward(cfg: ArchConfig, params: Params, frames) -> jax.Array:
+    e = cfg.encoder
+    x = frames.astype(_dtype(cfg))
+    x = x + L.sinusoidal_embed(e.num_frames, cfg.d_model).astype(x.dtype)
+    enc_spec = LayerSpec(mixer="attn", attn_kind="global",
+                        use_rope=False, ffn="dense")
+    positions = jnp.arange(e.num_frames)
+
+    def body(h, p_layer):
+        hn = L.norm_apply(cfg.norm, p_layer["ln_attn"], h)
+        y, _ = L.attention_block(p_layer["attn"], hn,
+                                 num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=cfg.head_dim, positions=positions,
+                                 use_rope=False, rope_theta=cfg.rope_theta,
+                                 causal=False)
+        h = h + y
+        hn = L.norm_apply(cfg.norm, p_layer["ln_ffn"], h)
+        h = h + L.ffn(p_layer["ffn"], hn, cfg.ffn_activation)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"]["blocks"])
+    return L.norm_apply(cfg.norm, params["encoder"]["norm"], x)
+
+
+def _embed_tokens(cfg, params, tokens):
+    x = L.embed(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _unembed(cfg, params, x):
+    x = L.norm_apply(cfg.norm, params["final_norm"], x)
+    table = (params["embed"] if cfg.tie_embeddings
+             else params["unembed"])
+    return L.unembed(table, x, cfg.vocab_size, cfg.logit_softcap)
+
+
+def forward(cfg: ArchConfig, params: Params, tokens, frames=None,
+            mode: str = "train", cache: Optional[Params] = None,
+            cache_pos=None) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (logits, new_cache_or_None, moe_aux_loss)."""
+    B, S = tokens.shape
+    positions = (jnp.arange(S)[None, :] + (cache_pos if mode == "decode"
+                                           else 0))
+    x = _embed_tokens(cfg, params, tokens)
+    if cfg.positional == "learned":
+        start = cache_pos if mode == "decode" else 0
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], start, S, 0)
+        x = x + pe.astype(x.dtype)
+
+    enc_out = None
+    if cfg.encoder is not None and mode != "decode":
+        enc_out = _encoder_forward(cfg, params, frames)
+
+    new_cache: Params = {"blocks": {}} if mode != "train" else None
+    aux_total = jnp.zeros((), jnp.float32)
+    cross_list_k, cross_list_v = [], []
+    layer_idx = 0
+
+    def run_unrolled(x, name, spec, aux_total, layer_idx):
+        c = cache.get(name) if cache is not None else None
+        xc = (cache["cross"] if (cache is not None and "cross" in cache)
+              else None)
+        ccache = ({"k": xc["k"][layer_idx], "v": xc["v"][layer_idx]}
+                  if xc is not None else None)
+        x, nc, ncross, aux = _apply_layer(
+            cfg, spec, params[name], x, positions=positions, mode=mode,
+            cache=c, cache_pos=cache_pos, enc_out=enc_out,
+            cross_cache=ccache)
+        if new_cache is not None:
+            new_cache[name] = nc
+        if ncross is not None:
+            cross_list_k.append(ncross["k"])
+            cross_list_v.append(ncross["v"])
+        return x, aux_total + aux, layer_idx + 1
+
+    for i, spec in enumerate(cfg.prefix):
+        x, aux_total, layer_idx = run_unrolled(x, f"prefix{i}", spec,
+                                               aux_total, layer_idx)
+
+    # scanned groups
+    p = len(cfg.pattern)
+    G = cfg.pattern_groups
+    xc_all = cache.get("cross") if cache is not None else None
+    if xc_all is not None:
+        # slice the cross cache for the scanned groups: layers
+        # [len(prefix) .. len(prefix)+G*p) reshaped (G, p, ...)
+        lo = len(cfg.prefix)
+        xk = xc_all["k"][lo:lo + G * p].reshape((G, p) + xc_all["k"].shape[1:])
+        xv = xc_all["v"][lo:lo + G * p].reshape((G, p) + xc_all["v"].shape[1:])
+    else:
+        xk = xv = None
+
+    def group_body(carry, xs):
+        x, aux_acc = carry
+        new_slot_caches = {}
+        new_cross_kv = []
+        for s, spec in enumerate(cfg.pattern):
+            c = xs["cache"][f"s{s}"] if "cache" in xs else None
+            ccache = ({"k": xs["xk"][:, s] if False else xs["xk"][s],
+                       "v": xs["xv"][s]} if "xk" in xs else None)
+            x, nc, ncross, aux = _apply_layer(
+                cfg, spec, xs["params"][f"s{s}"], x, positions=positions,
+                mode=mode, cache=c, cache_pos=cache_pos, enc_out=enc_out,
+                cross_cache=ccache)
+            aux_acc = aux_acc + aux
+            if nc is not None:
+                new_slot_caches[f"s{s}"] = nc
+            if ncross is not None:
+                new_cross_kv.append(ncross)
+        ys = {}
+        if new_slot_caches:
+            ys["cache"] = new_slot_caches
+        if new_cross_kv:
+            ys["xk"] = jnp.stack([c["k"] for c in new_cross_kv])
+            ys["xv"] = jnp.stack([c["v"] for c in new_cross_kv])
+        return (x, aux_acc), ys
+
+    xs = {"params": params["blocks"]}
+    if cache is not None:
+        xs["cache"] = cache["blocks"]
+    if xk is not None:
+        xs["xk"], xs["xv"] = xk, xv
+    if cfg.remat and mode == "train":
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if cfg.remat_policy == "dots" else None)
+        body_fn = jax.checkpoint(group_body, policy=policy)
+    else:
+        body_fn = group_body
+    (x, aux_total), ys = jax.lax.scan(body_fn, (x, aux_total), xs)
+    if new_cache is not None and "cache" in ys:
+        new_cache["blocks"] = ys["cache"]
+    if "xk" in ys:
+        # (G, p, B, F, KV, hd) → (G*p, ...)
+        cross_list_k.extend([ys["xk"].reshape((-1,) + ys["xk"].shape[2:])])
+        cross_list_v.extend([ys["xv"].reshape((-1,) + ys["xv"].shape[2:])])
+
+    for i, spec in enumerate(cfg.tail_specs):
+        x, aux_total, layer_idx = run_unrolled(x, f"tail{i}", spec,
+                                               aux_total, layer_idx)
+
+    if new_cache is not None:
+        if mode == "decode" and cache is not None and "cross" in cache:
+            new_cache["cross"] = cache["cross"]
+        elif cross_list_k:
+            new_cache["cross"] = {
+                "k": jnp.concatenate([k if k.ndim == 5 else k[None]
+                                      for k in cross_list_k], 0),
+                "v": jnp.concatenate([v if v.ndim == 5 else v[None]
+                                      for v in cross_list_v], 0)}
+
+    logits = _unembed(cfg, params, x)
+    return logits, new_cache, aux_total
+
+
+# ===========================================================================
+# Public step functions
+# ===========================================================================
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _, aux = forward(cfg, params, batch["tokens"],
+                             frames=batch.get("frames"), mode="train")
+    ce = L.cross_entropy(logits, batch["labels"])
+    coef = cfg.moe.aux_loss_coef if cfg.moe else 0.0
+    total = ce + coef * aux
+    return total, {"ce": ce, "moe_aux": aux}
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens, frames=None,
+            cache_len: Optional[int] = None):
+    """Serve-prefill: logits for the last position + a filled decode cache."""
+    B, S = tokens.shape
+    Lc = cache_len or S
+    cache = init_cache(cfg, B, Lc)
+    logits, new_cache, _ = forward(cfg, params, tokens, frames=frames,
+                                   mode="prefill", cache=cache, cache_pos=0)
+    return logits[:, -1], new_cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens, pos):
+    """One decode step: tokens (B,1), pos scalar int32 (next write index)."""
+    logits, new_cache, _ = forward(cfg, params, tokens, mode="decode",
+                                   cache=cache, cache_pos=pos)
+    return logits[:, -1], new_cache

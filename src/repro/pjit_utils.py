@@ -1,0 +1,28 @@
+"""SPMD helpers usable from model code without importing launch/.
+
+``constrain`` applies an internal sharding constraint only when the process
+has opted into SPMD mode (dry-run / distributed training); smoke tests and
+single-device benches run with constraints disabled so no mesh is required.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_SPMD = False
+
+
+def enable_spmd(flag: bool = True) -> None:
+    global _SPMD
+    _SPMD = flag
+
+
+def spmd_enabled() -> bool:
+    return _SPMD
+
+
+def constrain(x, spec: P):
+    if _SPMD:
+        return jax.lax.with_sharding_constraint(x, spec)
+    return x

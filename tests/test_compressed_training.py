@@ -1,0 +1,51 @@
+"""Gradient compression integrated into the train step: convergence + wire
+bytes (the distributed-optimization trick wired end to end)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.reduced import reduced
+from repro.launch import steps as S
+
+
+def _setup(compression):
+    cfg = reduced(get_config("internlm2-1.8b"))
+    opt = S.make_optimizer(cfg, peak_lr=5e-3, total_steps=40)
+    step = jax.jit(S.make_train_step(cfg, opt, compression=compression))
+    key = jax.random.PRNGKey(0)
+    state = S.init_train_state(cfg, key, opt, compression=compression)
+    tokens = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    return cfg, step, state, batch
+
+
+@pytest.mark.parametrize("compression", ["int8", "topk"])
+def test_compressed_training_converges(compression):
+    cfg, step, state, batch = _setup(compression)
+    losses = []
+    for _ in range(12):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], f"{compression} diverged: {losses}"
+    # wire bytes beat the fp32 gradient payload
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(state["params"]))
+    assert float(m["wire_bytes"]) < n_params * 4
+
+
+def test_compression_matches_uncompressed_early():
+    """With error feedback, the first int8 step tracks the exact step."""
+    cfg, step_c, state_c, batch = _setup("int8")
+    _, step_u, state_u, _ = _setup(None)
+    state_c, mc = step_c(state_c, batch)
+    state_u, mu = step_u(state_u, batch)
+    # same loss (forward identical); parameter delta within quantization err
+    assert abs(float(mc["loss"]) - float(mu["loss"])) < 1e-5
+    dc = jax.tree.leaves(state_c["params"])[0]
+    du = jax.tree.leaves(state_u["params"])[0]
+    rel = float(jnp.abs(dc - du).max())
+    assert rel < 0.15

@@ -1,0 +1,130 @@
+"""Unit + property tests for the Lachesis IR and partitioner extraction."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HASH, IRGraph, RANGE, Workload, author_integrator,
+                        dedupe, enumerate_candidates, keyless_candidates,
+                        matmul_workload, merge, pagerank_iteration, search)
+
+
+def test_ir_two_terminal_and_signature():
+    wl = author_integrator()
+    g = wl.graph
+    assert len(g.scans) == 2 and len(g.writes) == 1
+    assert len(g.partition_nodes) == 2
+    sig1 = g.graph_signature()
+    assert sig1 == author_integrator().graph.graph_signature()
+    assert sig1 != pagerank_iteration().graph.graph_signature()
+
+
+def test_alg1_alg2_extraction():
+    wl = author_integrator()
+    cands = enumerate_candidates(wl.graph, "submissions")
+    assert len(cands) == 1
+    c = cands[0]
+    assert c.graph.is_two_terminal()
+    assert c.strategy == HASH
+    assert c.signature() == "scan/parse:json/attr:author/partition[hash]"
+    # Listing-2 executability: recompiled key projection
+    keys = c.key_fn()({"author": np.array([5, 3, 5])})
+    assert list(np.asarray(keys)) == [5, 3, 5]
+
+
+def test_extraction_matmul_and_pagerank():
+    m = matmul_workload()
+    lhs = enumerate_candidates(m.graph, "lhs_blocks")
+    rhs = enumerate_candidates(m.graph, "rhs_blocks")
+    assert len(lhs) == 1 and len(rhs) == 1
+    assert "attr:col_id" in lhs[0].signature()
+    assert "attr:row_id" in rhs[0].signature()
+
+    pr = pagerank_iteration()
+    pages = enumerate_candidates(pr.graph, "pages")
+    assert len(pages) == 1 and "attr:url" in pages[0].signature()
+
+
+def test_diamond_paths_merge_to_one_candidate():
+    """Two scan→partition paths sharing terminals merge (Alg. 2)."""
+    wl = Workload("diamond")
+    ds = wl.scan("d")
+    a = ds["x"]
+    b = ds["y"]
+    key = a + b                       # diamond: scan→x→+, scan→y→+
+    wl.partition(key)
+    paths = search(wl.graph, wl.graph.find_scanner("d"))
+    assert len(paths) == 2
+    cands = merge(wl.graph, paths)
+    assert len(cands) == 1
+    assert cands[0].graph.is_two_terminal()
+    # executable: (x + y)
+    out = cands[0].key_fn()({"x": np.array([1, 2]), "y": np.array([10, 20])})
+    assert list(np.asarray(out)) == [11, 22]
+
+
+def test_complexity_and_keyless():
+    c = enumerate_candidates(author_integrator().graph, "submissions")[0]
+    assert c.complexity() > 0
+    for kc in keyless_candidates():
+        assert not kc.is_keyed
+        ids = kc.partition_ids({"x": np.arange(10)}, 4)
+        assert ids.shape == (10,) and int(ids.max()) < 4
+
+
+def test_range_vs_hash_distinct_signatures():
+    wl1 = Workload("w1")
+    d1 = wl1.scan("d")
+    wl1.partition(d1["k"], strategy=HASH)
+    wl2 = Workload("w2")
+    d2 = wl2.scan("d")
+    wl2.partition(d2["k"], strategy=RANGE)
+    c1 = enumerate_candidates(wl1.graph, "d")[0]
+    c2 = enumerate_candidates(wl2.graph, "d")[0]
+    assert c1.signature() != c2.signature()
+
+
+# -- property tests -----------------------------------------------------------
+
+@st.composite
+def random_key_chain(draw):
+    """A random unary chain scan→…→partition plus distractor branches."""
+    wl = Workload("rand")
+    ds = wl.scan("d")
+    col = ds
+    ops = draw(st.lists(st.sampled_from(["a", "b", "c"]), min_size=0,
+                        max_size=4))
+    for name in ops:
+        col = col[name]
+    wl.partition(col)
+    # distractor: a second consumer that writes without partitioning
+    wl.write(wl.map(ds, fn=None, tag="noop"), "out")
+    return wl, ops
+
+
+@given(random_key_chain())
+@settings(max_examples=30, deadline=None)
+def test_property_candidates_two_terminal(wl_ops):
+    wl, ops = wl_ops
+    cands = enumerate_candidates(wl.graph, "d")
+    assert len(cands) == 1
+    c = cands[0]
+    assert c.graph.is_two_terminal()
+    # signature mirrors the chain
+    assert c.signature().count("attr:") == len(ops)
+
+
+@given(st.integers(1, 64), st.integers(2, 16),
+       st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=200))
+@settings(max_examples=25, deadline=None)
+def test_property_hash_partition_ids_in_range(seed, m, keys):
+    from repro.core.partitioner import PartitionerCandidate
+    wl = Workload("w")
+    ds = wl.scan("d")
+    wl.partition(ds["k"])
+    c = enumerate_candidates(wl.graph, "d")[0]
+    ids = np.asarray(c.partition_ids({"k": np.array(keys, np.int64)}, m))
+    assert ids.min() >= 0 and ids.max() < m
+    # determinism
+    ids2 = np.asarray(c.partition_ids({"k": np.array(keys, np.int64)}, m))
+    assert np.array_equal(ids, ids2)

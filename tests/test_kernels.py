@@ -1,0 +1,126 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hash_partition.hash_partition import hash_partition
+from repro.kernels.hash_partition.ref import hash_partition_ref
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- flash attention -----------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, H, KV, S, hd, causal, window, softcap, dtype)
+    (1, 4, 2, 256, 64, True, None, 0.0, jnp.float32),
+    (2, 4, 4, 128, 32, True, 64, 0.0, jnp.float32),
+    (1, 2, 1, 192, 64, False, None, 0.0, jnp.float32),   # MQA + kv padding
+    (1, 4, 2, 256, 64, True, None, 30.0, jnp.float32),   # softcap (gemma2)
+    (1, 2, 2, 320, 128, True, 128, 50.0, jnp.float32),
+    (1, 4, 2, 256, 64, True, None, 0.0, jnp.bfloat16),
+    (1, 8, 2, 384, 128, True, None, 0.0, jnp.bfloat16),  # GQA group 4
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_oracle(case):
+    B, H, KV, S, hd, causal, window, cap, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=cap, block_q=128, block_k=128,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    tol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+# -- hash partition --------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,block", [(1000, 8, 512), (4096, 16, 1024),
+                                       (5000, 7, 512), (64, 4, 64),
+                                       (10_000, 256, 2048)])
+def test_hash_partition_matches_oracle(n, m, block):
+    keys = jax.random.randint(KEY, (n,), 0, 2 ** 31 - 1, jnp.int32)
+    pids, counts = hash_partition(keys, m, block=block, interpret=True)
+    rp, rc = hash_partition_ref(keys, m)
+    np.testing.assert_array_equal(np.asarray(pids), np.asarray(rp))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rc))
+    assert int(counts.sum()) == n
+
+
+@given(st.integers(2, 32),
+       st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=500))
+@settings(max_examples=15, deadline=None)
+def test_hash_partition_property(m, key_list):
+    keys = jnp.asarray(np.array(key_list, np.int32))
+    pids, counts = hash_partition(keys, m, block=128, interpret=True)
+    rp, rc = hash_partition_ref(keys, m)
+    np.testing.assert_array_equal(np.asarray(pids), np.asarray(rp))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rc))
+
+
+def test_hash_partition_matches_store_dispatch():
+    """Kernel hash == core.ir._mix_hash ⇒ kernel-partitioned data matches
+    the engine/store partitioning decisions."""
+    from repro.core.ir import _mix_hash
+    keys = jax.random.randint(KEY, (512,), 0, 2 ** 31 - 1, jnp.int32)
+    pids, _ = hash_partition(keys, 8, interpret=True)
+    expect = (np.asarray(_mix_hash(keys)) % 8).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(pids), expect)
+
+
+# -- SSD scan -----------------------------------------------------------------------
+
+SSD_CASES = [
+    (2, 128, 4, 32, 64, 32, jnp.float32),
+    (1, 256, 8, 64, 128, 64, jnp.float32),
+    (1, 128, 2, 16, 32, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_oracle(case):
+    B, T, H, P, N, chunk, dtype = case
+    ks = jax.random.split(KEY, 5)
+    x = (jax.random.normal(ks[0], (B, T, H, P), jnp.float32) * 0.5
+         ).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (B, T, N)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, T, N)) * 0.3).astype(dtype)
+    y, st_ = ssd_scan(x, dt, A, Bm, Cm, chunk, interpret=True)
+    yr, str_ = ssd_ref(x, dt, A, Bm, Cm, chunk)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(st_, np.float32),
+                               np.asarray(str_, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_ssd_kernel_state_feeds_decode():
+    """Kernel final state == reference final state ⇒ prefill-via-kernel can
+    hand off to the recurrent decode path."""
+    B, T, H, P, N, chunk = 1, 64, 2, 16, 32, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, T, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, T, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, T, N)) * 0.3
+    _, st_k = ssd_scan(x, dt, A, Bm, Cm, chunk, interpret=True)
+    _, st_r = ssd_ref(x, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r), atol=1e-5)

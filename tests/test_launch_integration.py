@@ -1,0 +1,45 @@
+"""Integration: one real dry-run cell in a 512-device subprocess, plus the
+train/serve drivers end-to-end on CPU."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess():
+    """The 512-device flag must stay subprocess-local (tests see 1 device)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "internlm2-1.8b", "--shape", "decode_32k"],
+        capture_output=True, text=True, env=ENV, cwd=REPO, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "bottleneck" in out.stdout
+
+
+def test_train_driver_reduced(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "internlm2-1.8b", "--reduced", "--steps", "8", "--batch", "2",
+         "--seq", "64", "--ckpt-dir", str(tmp_path)],
+        capture_output=True, text=True, env=ENV, cwd=REPO, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "done: loss" in out.stdout
+    assert any(d.startswith("step_") for d in os.listdir(tmp_path))
+
+
+def test_serve_driver_reduced():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "mamba2-370m", "--reduced", "--batch", "2", "--prompt-len", "32",
+         "--gen", "8"],
+        capture_output=True, text=True, env=ENV, cwd=REPO, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "tok/s" in out.stdout

@@ -1,0 +1,120 @@
+"""Alg. 4 matching, the workflow analyzer, and end-to-end Alg. 3."""
+
+import numpy as np
+
+from repro.core import (DRLSelector, GreedySelector, HistoryStore, Workload,
+                        author_integrator, enumerate_candidates,
+                        partitioning_creation, partitioning_match,
+                        plan_shuffles)
+from repro.core.dsl import reddit_loader
+
+
+def _consumer_and_candidate():
+    wl = author_integrator()
+    c = enumerate_candidates(wl.graph, "submissions")[0]
+    return wl, c
+
+
+def test_match_positive():
+    wl, c = _consumer_and_candidate()
+    res = partitioning_match(c, "submissions", wl.graph)
+    assert res.matched and len(res.partition_nodes) == 1
+
+
+def test_match_negative_different_key():
+    wl, _ = _consumer_and_candidate()
+    other = Workload("other")
+    ds = other.scan("submissions")
+    other.partition(ds.parse("json")["title"])      # different key chain
+    bad = enumerate_candidates(other.graph, "submissions")[0]
+    assert not partitioning_match(bad, "submissions", wl.graph).matched
+
+
+def test_match_negative_strategy():
+    wl, _ = _consumer_and_candidate()
+    rng = Workload("rng")
+    ds = rng.scan("submissions")
+    rng.partition(ds.parse("json")["author"], strategy="range")
+    c_range = enumerate_candidates(rng.graph, "submissions")[0]
+    assert not partitioning_match(c_range, "submissions", wl.graph).matched
+
+
+def test_plan_shuffles_split():
+    wl = author_integrator()
+    subs = enumerate_candidates(wl.graph, "submissions")[0]
+    elided, required = plan_shuffles(wl.graph, {"submissions": subs})
+    assert len(elided) == 1 and len(required) == 1   # authors still shuffles
+
+
+def test_skeleton_graph_and_consumer_enumeration():
+    hist = HistoryStore()
+    loader = reddit_loader("loader", "raw", "submissions", "json")
+    consumer = author_integrator()
+    for t in range(3):
+        hist.log_workload(loader, timestamp=10.0 * t, latency=5.0,
+                          input_bytes=1e9)
+        hist.log_workload(consumer, timestamp=10.0 * t + 5, latency=20.0,
+                          input_bytes=2e9)
+    groups, edges = hist.skeleton_graph()
+    assert len(groups) == 2                 # loader group + consumer group
+    assert len(edges) == 1                  # loader → consumer
+    consumers = hist.enumerate_consumers(loader.graph.graph_signature())
+    assert len(consumers) == 1
+    assert len(consumers[0].runs) == 3      # merged re-executions
+
+
+def test_history_persistence(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    hist = HistoryStore(path)
+    loader = reddit_loader("loader", "raw", "submissions", "json")
+    hist.log_workload(loader, timestamp=1.0, latency=2.0, input_bytes=1e6)
+    hist2 = HistoryStore(path)
+    assert len(hist2.records) == 1
+    assert hist2.records[0].app_id == "loader"
+
+
+def _history_with_consumer(candidate_sig, n=3):
+    hist = HistoryStore()
+    loader = reddit_loader("loader", "raw", "submissions", "json")
+    consumer = author_integrator()
+    for t in range(n):
+        hist.log_workload(loader, timestamp=100.0 * t, latency=40.0,
+                          input_bytes=2e9)
+        hist.log_workload(
+            consumer, timestamp=100.0 * t + 50, latency=120.0,
+            input_bytes=3e9,
+            candidate_stats={candidate_sig: {
+                "selectivity": 0.1, "distinct_keys": 1e6,
+                "num_objects": 2e7}})
+    return hist, loader
+
+
+def test_alg3_greedy_picks_keyed_candidate():
+    wl, c = _consumer_and_candidate()
+    hist, loader = _history_with_consumer(c.signature())
+    dec = partitioning_creation(loader, "submissions", hist,
+                                selector=GreedySelector(),
+                                dataset_bytes=2e9)
+    assert dec.candidate.is_keyed
+    assert dec.candidate.signature() == c.signature()
+    assert dec.elapsed_s < 5.0              # producer-side online overhead
+
+
+def test_alg3_no_history_falls_back_keyless():
+    hist = HistoryStore()
+    loader = reddit_loader("loader", "raw", "submissions", "json")
+    dec = partitioning_creation(loader, "submissions", hist,
+                                dataset_bytes=1e9)
+    assert not dec.candidate.is_keyed       # only rr/random in the space
+
+
+def test_alg3_drl_selector_runs():
+    from repro.core.drl.agent import A3CAgent, A3CConfig
+    from repro.core.features import state_dim
+    wl, c = _consumer_and_candidate()
+    hist, loader = _history_with_consumer(c.signature())
+    agent = A3CAgent(A3CConfig(state_dim=state_dim(12), num_actions=12))
+    dec = partitioning_creation(loader, "submissions", hist,
+                                selector=DRLSelector(agent),
+                                dataset_bytes=2e9)
+    assert dec.action_index < len(dec.features)

@@ -1,0 +1,76 @@
+"""Property tests for Alg. 4: soundness + self-match completeness."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HistoryStore, Workload, enumerate_candidates,
+                        partitioning_creation, partitioning_match)
+from repro.core.advisor import GreedySelector
+from repro.core.dsl import reddit_loader
+
+ATTRS = ["a", "b", "c", "d"]
+
+
+def _workload_with_chain(chain, strategy="hash"):
+    wl = Workload("w")
+    ds = wl.scan("data")
+    col = ds
+    for name in chain:
+        col = col[name]
+    wl.partition(col, strategy=strategy)
+    wl.write(wl.map(ds, fn=None, tag="noop"), "out")
+    return wl
+
+
+@given(st.lists(st.sampled_from(ATTRS), min_size=0, max_size=3),
+       st.lists(st.sampled_from(ATTRS), min_size=0, max_size=3))
+@settings(max_examples=40, deadline=None)
+def test_match_iff_same_chain(chain_a, chain_b):
+    """Completeness: a stored partitioning always matches the IR it was
+    extracted from.  Soundness: it matches a different IR iff the key
+    chains are identical (same attr sequence)."""
+    wa = _workload_with_chain(chain_a)
+    wb = _workload_with_chain(chain_b)
+    ca = enumerate_candidates(wa.graph, "data")[0]
+    # completeness
+    assert partitioning_match(ca, "data", wa.graph).matched
+    # soundness
+    cross = partitioning_match(ca, "data", wb.graph).matched
+    assert cross == (chain_a == chain_b)
+
+
+@given(st.lists(st.sampled_from(ATTRS), min_size=1, max_size=3))
+@settings(max_examples=20, deadline=None)
+def test_hash_never_matches_range(chain):
+    h = _workload_with_chain(chain, "hash")
+    r = _workload_with_chain(chain, "range")
+    ch = enumerate_candidates(h.graph, "data")[0]
+    assert not partitioning_match(ch, "data", r.graph).matched
+
+
+def test_advisor_weighs_consumers_by_frequency():
+    """Eq. 2: with two consumers wanting different keys, the advisor picks
+    the key of the more frequent consumer."""
+    heavy = _workload_with_chain(["a"])
+    light = _workload_with_chain(["b"])
+    c_heavy = enumerate_candidates(heavy.graph, "data")[0]
+    c_light = enumerate_candidates(light.graph, "data")[0]
+    loader = reddit_loader("loader", "raw", "data", "json")
+
+    hist = HistoryStore()
+    t = 0.0
+    for _ in range(8):                      # heavy consumer: 8 runs
+        hist.log_workload(loader, timestamp=t, latency=10.0, input_bytes=1e9)
+        hist.log_workload(heavy, timestamp=t + 1, latency=50.0,
+                          input_bytes=1e9,
+                          candidate_stats={c_heavy.signature(): {
+                              "selectivity": 0.1, "distinct_keys": 1e5}})
+        t += 10
+    hist.log_workload(light, timestamp=t, latency=50.0, input_bytes=1e9,
+                      candidate_stats={c_light.signature(): {
+                          "selectivity": 0.1, "distinct_keys": 1e5}})
+
+    dec = partitioning_creation(loader, "data", hist,
+                                selector=GreedySelector(),
+                                dataset_bytes=1e9)
+    assert dec.candidate.signature() == c_heavy.signature()

@@ -1,0 +1,111 @@
+"""Per-arch smoke + decode-consistency tests (reduced configs, CPU)."""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.configs.reduced import reduced
+from repro.models import transformer as T
+
+ARCHS = list_archs()
+
+
+def _setup(arch, seed=0, big_capacity=True):
+    cfg = reduced(get_config(arch))
+    if cfg.moe and big_capacity:
+        # avoid capacity drops so decode matches full forward exactly
+        cfg = replace(cfg, moe=replace(cfg.moe, capacity_factor=8.0))
+    key = jax.random.PRNGKey(seed)
+    params = T.init_params(cfg, key)
+    return cfg, params, key
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg, params, key = _setup(arch)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.encoder:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder.num_frames, cfg.d_model))
+    logits, _, _ = T.forward(cfg, params, tokens,
+                             frames=batch.get("frames"), mode="train")
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, metrics = T.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    # one optimizer step moves the loss
+    from repro.launch.steps import make_optimizer, make_train_step
+    opt = make_optimizer(replace(cfg, accum_steps=1), peak_lr=1e-2,
+                         total_steps=10)
+    step = make_train_step(replace(cfg, accum_steps=1), opt)
+    state = {"params": params, "opt": opt.init(params)}
+    state, m1 = step(state, batch)
+    state, m2 = step(state, batch)
+    assert np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"]) + 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg, params, key = _setup(arch, seed=1)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    frames = (jax.random.normal(key, (B, cfg.encoder.num_frames, cfg.d_model))
+              if cfg.encoder else None)
+    logits_full, _, _ = T.forward(cfg, params, toks, frames=frames,
+                                  mode="train")
+    lg_prefill, cache = T.prefill(cfg, params, toks[:, :S], frames=frames,
+                                  cache_len=S + 8)
+    err1 = np.abs(np.asarray(lg_prefill)
+                  - np.asarray(logits_full[:, S - 1])).max()
+    lg_dec, new_cache = T.decode_step(cfg, params, cache, toks[:, S:S + 1],
+                                      jnp.int32(S))
+    err2 = np.abs(np.asarray(lg_dec) - np.asarray(logits_full[:, S])).max()
+    assert err1 < 2e-3, f"{arch} prefill mismatch {err1}"
+    assert err2 < 2e-3, f"{arch} decode mismatch {err2}"
+
+
+def test_moe_capacity_drop_is_only_decode_divergence():
+    """With cf=1.25 (paper-realistic) the decode/full divergence comes from
+    capacity dropping alone — validated hypothesis from development."""
+    cfg, params, key = _setup("deepseek-v2-236b", big_capacity=False)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    logits_full, _, _ = T.forward(cfg, params, toks, mode="train")
+    lg_prefill, _ = T.prefill(cfg, params, toks[:, :S], cache_len=S + 8)
+    err = np.abs(np.asarray(lg_prefill)
+                 - np.asarray(logits_full[:, S - 1])).max()
+    # prefill sees the same token population → same drops up to float-order
+    # ties at the capacity boundary (different einsum fusion between paths)
+    assert err < 5e-2
+
+
+def test_gradients_flow_everywhere():
+    cfg, params, key = _setup("recurrentgemma-9b")
+    B, S = 2, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    grads = jax.grad(lambda p: T.loss_fn(cfg, p, batch)[0])(params)
+    norms = jax.tree.map(lambda g: float(jnp.abs(g).max()), grads)
+    leaves = jax.tree.leaves(norms)
+    assert all(np.isfinite(l) for l in leaves)
+    assert sum(1 for l in leaves if l > 0) > len(leaves) * 0.7
+
+
+def test_param_counts_match_analytic():
+    """init_params leaf sizes must sum to ArchConfig.param_count()."""
+    for arch in ("internlm2-1.8b", "mamba2-370m"):
+        cfg = get_config(arch)
+        struct = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        total = sum(int(np.prod(l.shape))
+                    for l in jax.tree.leaves(struct))
+        analytic = cfg.param_count()
+        # norms/biases/positional are not in the analytic count — ≤1.5% slack
+        assert abs(total - analytic) / analytic < 0.015, arch

@@ -1,0 +1,45 @@
+"""Sharding advisor selects the argmin-dominant-term candidate."""
+
+from repro.core.sharding_advisor import (ShardingCandidate, advise,
+                                         dominant_term)
+
+
+def test_advise_picks_min_dominant_term():
+    fake_results = {
+        "baseline": {"compute_s": 1.0, "memory_s": 5.0, "collective_s": 2.0},
+        "cache_seq_shard": {"compute_s": 1.0, "memory_s": 3.0,
+                            "collective_s": 0.5},
+        "flash_decode": {"compute_s": 1.0, "memory_s": 4.0,
+                         "collective_s": 2.0},
+    }
+
+    def fake_analyze(arch, shape, multi_pod=False, extra_cfg=None,
+                     variant=None, verbose=False):
+        variant = variant or {}
+        if variant.get("cache_seq_shard"):
+            return dict(fake_results["cache_seq_shard"])
+        if variant.get("flash_decode"):
+            return dict(fake_results["flash_decode"])
+        return dict(fake_results["baseline"])
+
+    dec = advise("qwen1.5-110b", "decode_32k", analyze=fake_analyze)
+    assert dec.winner.name == "cache_seq_shard"
+    assert dec.dominant_term_s == 3.0
+    assert len(dec.trail) == 3
+
+
+def test_advise_skips_failing_candidates():
+    def flaky(arch, shape, multi_pod=False, extra_cfg=None, variant=None,
+              verbose=False):
+        if variant:
+            raise RuntimeError("did not lower")
+        return {"compute_s": 1.0, "memory_s": 1.0, "collective_s": 1.0}
+
+    dec = advise("qwen1.5-110b", "decode_32k", analyze=flaky)
+    assert dec.winner.name == "baseline"
+    assert any("error" in t for t in dec.trail)
+
+
+def test_dominant_term():
+    assert dominant_term({"compute_s": 1, "memory_s": 9,
+                          "collective_s": 3}) == 9

@@ -1,0 +1,64 @@
+"""PartitionStore invariants (hypothesis property tests)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Workload, enumerate_candidates
+from repro.core.partitioner import (PartitionerCandidate, RANDOM,
+                                    ROUND_ROBIN)
+from repro.data.partition_store import PartitionStore
+
+
+def _keyed_candidate():
+    wl = Workload("w")
+    ds = wl.scan("d")
+    wl.partition(ds["k"])
+    return enumerate_candidates(wl.graph, "d")[0]
+
+
+@given(st.integers(2, 12),
+       st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=300),
+       st.sampled_from(["hash", "rr", "random"]))
+@settings(max_examples=30, deadline=None)
+def test_write_preserves_rows(m, keys, strategy):
+    keys = np.array(keys, np.int64)
+    vals = np.arange(len(keys), dtype=np.float32)
+    store = PartitionStore(num_workers=m)
+    if strategy == "hash":
+        cand = _keyed_candidate()
+    else:
+        cand = PartitionerCandidate(
+            graph=None,
+            strategy=ROUND_ROBIN if strategy == "rr" else RANDOM)
+    ds = store.write("d", {"k": keys, "v": vals}, cand)
+
+    assert int(ds.counts.sum()) == len(keys)
+    assert ds.capacity == int(ds.counts.max()) if len(keys) else True
+    flat = ds.gather()
+    # multiset of rows preserved
+    got = sorted(zip(flat["k"].tolist(), flat["v"].tolist()))
+    want = sorted(zip(keys.tolist(), vals.tolist()))
+    assert got == want
+
+
+@given(st.integers(2, 8),
+       st.lists(st.integers(0, 10 ** 6), min_size=10, max_size=300))
+@settings(max_examples=20, deadline=None)
+def test_hash_colocation_invariant(m, keys):
+    """Same key ⇒ same worker (the co-location guarantee joins rely on)."""
+    keys = np.array(keys, np.int64)
+    store = PartitionStore(num_workers=m)
+    ds = store.write("d", {"k": keys}, _keyed_candidate())
+    worker_of = {}
+    for w in range(m):
+        for key in ds.columns["k"][w, :ds.counts[w]]:
+            if key in worker_of:
+                assert worker_of[key] == w
+            worker_of[key] = w
+
+
+def test_round_robin_balance():
+    store = PartitionStore(num_workers=8)
+    ds = store.write("d", {"k": np.arange(800)})
+    assert ds.skew() == 1.0          # perfectly balanced
+    assert ds.partitioner.strategy == ROUND_ROBIN
