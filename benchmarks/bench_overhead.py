@@ -4,6 +4,13 @@ Offline (Tab. 2): skeleton-graph construction + IR signature creation over
 synthetic trace archives shaped like the WTA sources (workflow count ×
 tasks-per-workflow).  Online consumer side (Fig. 11): Alg. 4 matching cost
 per query.  Producer side (Tab. 3) is measured in bench_reddit.
+
+Repartition backends (DESIGN §5): host-vs-device repartition comparison on
+the TPC-H, Reddit, and PageRank workloads — the same consumer run over a
+round-robin store (every shuffle real) with the numpy path and with the
+Pallas hash-partition kernel path.  Off-TPU the kernel runs in interpret
+mode (Python-speed), so the comparison there is a correctness/coverage
+signal, not a perf number; on TPU the same rows measure the compiled path.
 """
 
 from __future__ import annotations
@@ -13,11 +20,13 @@ import time
 import numpy as np
 
 from repro.core import (HistoryStore, author_integrator,
-                        enumerate_candidates, partitioning_match)
+                        enumerate_candidates, pagerank_iteration,
+                        partitioning_match)
 from repro.core.dsl import reddit_loader
+from repro.data.partition_store import PartitionStore
 from repro.core.history import ExecutionRecord
 
-from .common import emit
+from .common import emit, run_consumer
 
 # (name, workflows, tasks/workflow) — WTA-shaped, scaled to CPU budget
 TRACES = [
@@ -78,9 +87,54 @@ def online_consumer_matching():
          f"(paper Fig.11: sub-second; here {per * 1e3:.3f} ms/query)")
 
 
+def _backend_cases():
+    """The three acceptance workloads, each with round-robin-stored inputs
+    so every partition node performs a real repartition."""
+    from .bench_pagerank import make_graph, wire_emit_fn
+    from .bench_reddit import make_data
+    from .bench_tpch import make_tables, q_orders_lineitem
+
+    subs, auths = make_data(100_000, 25_000)
+    yield ("reddit", author_integrator(),
+           {"submissions": subs, "authors": auths})
+
+    pages, ranks = make_graph(100_000, fanout=5)
+    yield ("pagerank", wire_emit_fn(pagerank_iteration(), 5),
+           {"pages": pages, "ranks": ranks})
+
+    orders, lineitem, part = make_tables()
+    yield ("tpch_q04like", q_orders_lineitem(),
+           {"orders": orders, "lineitem": lineitem, "part": part})
+
+
+def repartition_backends(workers: int = 8):
+    import jax
+    from repro.configs import lachesis_paper
+    on_tpu = jax.default_backend() == "tpu"
+    backends = lachesis_paper.get().engine_backends
+    for name, wl, tables in _backend_cases():
+        res = {}
+        for backend in backends:
+            store = PartitionStore(workers)
+            for tname, data in tables.items():
+                store.write(tname, data)           # rr ⇒ shuffles all run
+            res[backend] = run_consumer(store, wl, repeats=2,
+                                        backend=backend)
+        h, d = res["host"], res["device"]
+        assert d["device_repartitions"] == d["shuffles"] > 0
+        mode = "compiled" if on_tpu else "interpret"
+        emit(f"repartition_{name}_device", d["wall_s"] * 1e6,
+             f"host={h['wall_s'] * 1e6:.0f}us "
+             f"device/host={d['wall_s'] / h['wall_s']:.2f}x "
+             f"shuffles={d['shuffles']} "
+             f"device_repartitions={d['device_repartitions']} "
+             f"bytes={d['shuffle_bytes']} (kernel {mode} mode)")
+
+
 def main():
     offline_overheads()
     online_consumer_matching()
+    repartition_backends()
 
 
 if __name__ == "__main__":

@@ -23,8 +23,9 @@ from repro.data.partition_store import PartitionStore
 NET_BW = 1.25e9      # 10 Gbps
 
 
-def run_consumer(store: PartitionStore, workload, repeats: int = 3):
-    eng = Engine(store)
+def run_consumer(store: PartitionStore, workload, repeats: int = 3,
+                 backend: str = "host"):
+    eng = Engine(store, backend=backend)
     best = None
     for _ in range(repeats):
         t0 = time.perf_counter()
@@ -38,6 +39,7 @@ def run_consumer(store: PartitionStore, workload, repeats: int = 3):
             "shuffle_bytes": stats.shuffle_bytes,
             "shuffles": stats.shuffles_performed,
             "elided": stats.shuffles_elided,
+            "device_repartitions": stats.device_repartitions,
             "match_overhead_s": stats.match_overhead_s}
 
 
@@ -58,5 +60,11 @@ def advisor_decide(producer, dataset, consumer, cand_sig, *,
                                  dataset_bytes=dataset_bytes)
 
 
+# Rows emitted so far — run.py dumps this for --json snapshots.
+ROWS: List[Dict[str, object]] = []
+
+
 def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                 "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -54,3 +54,15 @@ print(f"join ran with {stats.shuffles_performed} shuffles "
       f"({stats.shuffles_elided} elided, {stats.shuffle_bytes} bytes moved)")
 assert stats.shuffles_performed == 0
 print("OK — persistent partitioning made the join local.")
+
+# -- 5. the device repartition path (DESIGN §5) ------------------------------------
+# With a round-robin store the shuffles are real; backend="device" routes
+# them through the Pallas hash-partition kernel (interpret mode off-TPU),
+# bit-identical to the host path.
+rr_store = PartitionStore(num_workers=8)
+rr_store.write("submissions", subs)
+rr_store.write("authors", auths)
+_, dev_stats = Engine(rr_store, backend="device").run(consumer)
+assert dev_stats.device_repartitions == dev_stats.shuffles_performed == 2
+print(f"device backend: {dev_stats.device_repartitions} repartitions ran "
+      "through the Pallas kernel.")

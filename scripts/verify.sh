@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification on CPU: install dev extras (best-effort — the
+# property tests self-skip if hypothesis is unavailable) and run the suite
+# with jax pinned to the CPU backend so Pallas kernels take the interpret
+# path.
+#
+# Usage: scripts/verify.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt || \
+    echo "WARN: dev deps not installed (offline?) — property tests will skip"
+
+JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q "$@"

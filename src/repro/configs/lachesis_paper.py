@@ -29,6 +29,11 @@ class PaperWorkloadConfig:
         ("aws-10w-1gbps", 10, 0.125e9),
         ("gcp-8w-10gbps", 8, 1.25e9),
     )
+    # Repartition backends benchmarked against each other (DESIGN §5):
+    # "host" = numpy gather/re-bucket, "device" = Pallas hash_partition
+    # kernel + jax scatter (interpret mode off-TPU).  Consumed by
+    # benchmarks/bench_overhead.repartition_backends.
+    engine_backends: Tuple[str, ...] = ("host", "device")
 
 
 def get() -> PaperWorkloadConfig:

@@ -11,7 +11,12 @@ its cost is measured.
 Execution is columnar (numpy host-side — storage-layer compute), with the
 per-worker layout carried through so local operators stay local.  Join
 restriction: the right side must have unique keys (all paper workloads —
-authors, ranks, matrix blocks — satisfy this); documented in DESIGN.md.
+authors, ranks, matrix blocks — satisfy this); documented in DESIGN.md §3.
+
+Backends (DESIGN §5): ``backend="host"`` repartitions with numpy;
+``backend="device"`` routes every hash repartition through the fused Pallas
+``hash_partition`` kernel plus a jax-backed re-bucket (interpret mode on
+CPU), bit-identical to the host path.
 """
 
 from __future__ import annotations
@@ -25,7 +30,8 @@ import numpy as np
 from .ir import IRGraph, resolve_fn
 from .matching import partitioning_match
 from .partitioner import PartitionerCandidate, merge, search
-from ..data.partition_store import PartitionStore, StoredDataset
+from ..data.device_repartition import device_rebucket
+from ..data.partition_store import BACKENDS, PartitionStore, StoredDataset
 
 Columns = Dict[str, np.ndarray]
 
@@ -61,6 +67,7 @@ class EngineStats:
     shuffles_elided: int = 0
     shuffles_performed: int = 0
     shuffle_bytes: int = 0
+    device_repartitions: int = 0     # shuffles routed through the Pallas path
     match_overhead_s: float = 0.0
     stage_latency: Dict[str, float] = field(default_factory=dict)
     wall_s: float = 0.0
@@ -72,13 +79,23 @@ class EngineStats:
 class Engine:
     def __init__(self, store: PartitionStore,
                  enable_lachesis_matching: bool = True,
-                 net_bandwidth: float = 1.25e9):
+                 net_bandwidth: float = 1.25e9,
+                 backend: str = "host",
+                 interpret: Optional[bool] = None):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
         self.store = store
         self.matching = enable_lachesis_matching
         self.net_bandwidth = net_bandwidth
+        self.backend = backend
+        self.interpret = interpret   # None → auto (interpret mode off-TPU)
 
     # ------------------------------------------------------------------ run --
-    def run(self, workload) -> Tuple[Dict[int, Any], EngineStats]:
+    def run(self, workload,
+            backend: Optional[str] = None) -> Tuple[Dict[int, Any], EngineStats]:
+        backend = self.backend if backend is None else backend
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
         g: IRGraph = workload.graph
         stats = EngineStats()
         t_start = time.perf_counter()
@@ -102,7 +119,7 @@ class Engine:
                 vals[nid] = TableVal(flat, ds.counts.copy(), ds.partitioner)
             elif kind == "partition":
                 vals[nid] = self._exec_partition(g, nid, cands_by_pnode,
-                                                 vals, stats)
+                                                 vals, stats, backend)
             elif kind == "join":
                 vals[nid] = self._exec_join(vals[parents[0]], vals[parents[1]],
                                             node.params.get("projection"))
@@ -135,7 +152,8 @@ class Engine:
         return vals, stats
 
     # ------------------------------------------------------- partition node --
-    def _exec_partition(self, g, nid, cands_by_pnode, vals, stats) -> TableVal:
+    def _exec_partition(self, g, nid, cands_by_pnode, vals, stats,
+                        backend: str = "host") -> TableVal:
         """Repartition (or elide) at a partition node.
 
         The partition key is the *evaluated* parent key-expression — aligned
@@ -165,6 +183,16 @@ class Engine:
         # shuffle: hash the key column, re-bucket every column
         from .ir import _mix_hash
         strategy = g.nodes[nid].params.get("strategy", "hash")
+        if backend == "device" and strategy == "hash" and key_vals.size:
+            # DESIGN §5: fused Pallas hash+histogram, jax re-bucket
+            new_cols, counts = device_rebucket(table.columns, key_vals,
+                                               table.m,
+                                               interpret=self.interpret)
+            stats.shuffles_performed += 1
+            stats.device_repartitions += 1
+            stats.shuffle_bytes += int(table.nbytes() * (table.m - 1)
+                                       / table.m)
+            return TableVal(new_cols, counts, cand or table.partitioner)
         if strategy == "range":
             lo, hi = key_vals.min(), key_vals.max()
             width = max((hi - lo) / table.m, 1e-9)

@@ -6,6 +6,11 @@ The *match ⇒ elide-shuffle* decision becomes: if a consumer step function's
 required input ``PartitionSpec`` equals the stored one, XLA inserts **no
 resharding collective** for that operand — verified structurally in the
 dry-run by counting collectives in the lowered HLO.
+
+:func:`device_put_dataset` closes the loop for the device-resident
+repartition path (DESIGN §5): a store dataset's ``(m, capacity, ...)``
+columns are placed with the leading worker axis sharded over the mesh, so a
+worker-local consumer reads only its own shard.
 """
 
 from __future__ import annotations
@@ -13,9 +18,11 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .partitioner import PartitionerCandidate
+from ..data.device_repartition import dtype_roundtrips
 
 
 def sharding_for(mesh: Mesh, candidate: Optional[PartitionerCandidate],
@@ -46,3 +53,32 @@ def specs_match(a: P, b: P) -> bool:
 def would_elide_collective(stored: P, required: P) -> bool:
     """True ⇒ consuming the operand needs no resharding collective."""
     return specs_match(stored, required)
+
+
+def device_put_dataset(mesh: Mesh, ds,
+                       data_axes: Tuple[str, ...] = ("data",)):
+    """Place a StoredDataset's padded columns on ``mesh``, worker axis
+    sharded — the persistent partitioning made physical (DESIGN §5).
+
+    Returns a new ``StoredDataset`` whose round-trippable columns are jax
+    arrays committed to ``sharding_for(mesh, ds.partitioner)``; 64-bit
+    columns (unrepresentable with x64 disabled) stay host-resident.  The
+    worker count ``m`` must divide evenly over the data mesh axes.
+    """
+    from ..data.partition_store import StoredDataset
+    extent = int(np.prod([mesh.shape[a] for a in data_axes]))
+    if ds.num_workers % extent:
+        raise ValueError(
+            f"m={ds.num_workers} not divisible by mesh data extent {extent}")
+    cols = {}
+    for k, v in ds.columns.items():
+        v_np = np.asarray(v)
+        if dtype_roundtrips(v_np.dtype):
+            sh = sharding_for(mesh, ds.partitioner, data_axes,
+                              extra_dims=v_np.ndim - 2)
+            cols[k] = jax.device_put(v_np, sh)
+        else:
+            cols[k] = v_np
+    return StoredDataset(name=ds.name, columns=cols, counts=ds.counts,
+                         partitioner=ds.partitioner, num_rows=ds.num_rows,
+                         nbytes=ds.nbytes, created_at=ds.created_at)

@@ -1,0 +1,161 @@
+"""Device-resident repartition path (DESIGN §5).
+
+The paper's dispatch hot spot — hash the partition key, histogram the
+destinations, re-bucket every column — runs here through the fused Pallas
+``hash_partition`` kernel instead of host-side numpy.  Two consumers:
+
+* the :class:`~repro.data.partition_store.PartitionStore` device write path
+  (:func:`device_scatter_padded` — scatter flat rows into the persistent
+  ``(m, capacity, ...)`` layout), and
+* the engine's repartition node (:func:`device_rebucket` — re-bucket a flat
+  intermediate into worker segments).
+
+Both consume the kernel's ``(pids, histogram)`` output directly, so the
+histogram the store needs to size buffers is produced in the same VMEM pass
+that hashes the keys.
+
+Bit-identical guarantee: the kernel applies the same Wang hash as
+``core.ir._mix_hash`` and re-bucketing is a *stable* sort by partition id
+followed by a pure permutation gather — no arithmetic touches the payload —
+so device results match the host numpy path exactly.  With jax's default
+x64-disabled config, 64-bit payload columns cannot round-trip through jnp;
+those are gathered host-side by the device-computed permutation (hybrid
+gather), preserving exact bits and dtypes either way.
+
+On CPU the kernel runs in ``interpret`` mode (auto-detected) so CI covers
+the identical code path the TPU executes compiled.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.hash_partition.ops import partition_ids
+
+Columns = Dict[str, np.ndarray]
+
+
+def default_interpret() -> bool:
+    """Pallas kernels need interpret mode anywhere but a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else interpret
+
+
+def dtype_roundtrips(dtype) -> bool:
+    """True if jnp.asarray preserves this dtype under the active jax config
+    (x64-disabled canonicalizes int64/float64 down — those columns must stay
+    host-side to keep the bit-identical guarantee)."""
+    return jnp.asarray(np.empty(0, dtype)).dtype == np.dtype(dtype)
+
+
+def as_kernel_keys(keys) -> jax.Array:
+    """Normalize a key column for the hash kernel.
+
+    Mirrors ``core.ir._mix_hash``'s dtype handling exactly (float32 bits are
+    reinterpreted, everything else is cast to int32 with jnp's canonical
+    truncation) so kernel pids equal host pids bit-for-bit.
+    """
+    k = np.asarray(keys)
+    if np.issubdtype(k.dtype, np.integer):
+        return jnp.asarray(k.astype(np.int32))
+    if k.dtype == np.float64:                     # jnp canonicalizes f64→f32
+        k = k.astype(np.float32)
+    if k.dtype == np.float32:
+        return jnp.asarray(k.view(np.int32))
+    return jnp.asarray(k.astype(np.int32))
+
+
+def device_partition_ids(keys, num_partitions: int, *,
+                         interpret: Optional[bool] = None,
+                         use_kernel: bool = True
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Kernel dispatch: keys → (pids (N,) int32, histogram (m,) int32)."""
+    keys = as_kernel_keys(keys)
+    if keys.shape[0] == 0:           # zero-size grids crash pallas_call
+        return (jnp.zeros(0, jnp.int32),
+                jnp.zeros(num_partitions, jnp.int32))
+    return partition_ids(keys, num_partitions,
+                         interpret=_resolve_interpret(interpret),
+                         use_kernel=use_kernel)
+
+
+def _take(v: np.ndarray, order: jax.Array) -> np.ndarray:
+    """Permutation gather — on device when the dtype round-trips, else
+    host-side with the device-computed order (hybrid gather, DESIGN §5)."""
+    v = np.asarray(v)
+    if dtype_roundtrips(v.dtype):
+        return np.asarray(jnp.take(jnp.asarray(v), order, axis=0))
+    return v[np.asarray(order)]
+
+
+def device_rebucket(columns: Columns, key_vals, num_partitions: int, *,
+                    interpret: Optional[bool] = None,
+                    use_kernel: bool = True) -> Tuple[Columns, np.ndarray]:
+    """Re-bucket flat columns by hash(key) % m through the Pallas kernel.
+
+    Returns ``(new_columns incl "__key__", counts)`` — the same contract as
+    the engine's host-side shuffle (stable sort by pid + gather), with the
+    per-worker counts coming from the kernel's fused histogram.
+    """
+    key_vals = np.asarray(key_vals).reshape(-1)
+    n = key_vals.size
+    if n == 0:
+        out = {k: np.asarray(v).copy() for k, v in columns.items()}
+        out["__key__"] = key_vals
+        return out, np.zeros(num_partitions, np.int64)
+    pids, hist = device_partition_ids(key_vals, num_partitions,
+                                      interpret=interpret,
+                                      use_kernel=use_kernel)
+    order = jnp.argsort(pids, stable=True)
+    out = {k: _take(v, order) for k, v in columns.items()}
+    out["__key__"] = _take(key_vals, order)
+    return out, np.asarray(hist).astype(np.int64)
+
+
+def device_scatter_padded(flat_columns: Columns, pids, counts, *,
+                          capacity: Optional[int] = None) -> Columns:
+    """Scatter flat rows into the persistent ``(m, capacity, ...)`` layout.
+
+    Consumes the kernel's ``(pids, histogram)`` pair: destination slot of row
+    i is ``(pids[i], rank-of-i-within-its-partition)``, computed as a stable
+    sort by pid plus an offset subtraction — one jnp scatter per column, no
+    per-worker host loop.  Round-trippable columns come back device-resident
+    (jax arrays); 64-bit columns are scattered host-side (hybrid).
+    """
+    counts_np = np.asarray(counts).astype(np.int64)
+    m = int(counts_np.shape[0])
+    n = int(counts_np.sum())
+    cap = int(capacity) if capacity is not None else \
+        (int(counts_np.max()) if n else 1)
+
+    pids_j = jnp.asarray(np.asarray(pids).astype(np.int32))
+    order = jnp.argsort(pids_j, stable=True)
+    sorted_pids = jnp.take(pids_j, order)
+    offsets = jnp.asarray(
+        np.concatenate([[0], np.cumsum(counts_np)[:-1]]).astype(np.int32))
+    rank = jnp.arange(n, dtype=jnp.int32) - jnp.take(offsets, sorted_pids)
+    dest = sorted_pids.astype(jnp.int32) * cap + rank
+
+    order_np = np.asarray(order)
+    dest_np = np.asarray(dest)
+    columns: Columns = {}
+    for k, v in flat_columns.items():
+        v = np.asarray(v)
+        if dtype_roundtrips(v.dtype):
+            vd = jnp.asarray(v)
+            sv = jnp.take(vd, order, axis=0)
+            buf = jnp.zeros((m * cap,) + v.shape[1:], vd.dtype)
+            columns[k] = buf.at[dest].set(sv).reshape(
+                (m, cap) + v.shape[1:])
+        else:
+            buf = np.zeros((m * cap,) + v.shape[1:], v.dtype)
+            buf[dest_np] = v[order_np]
+            columns[k] = buf.reshape((m, cap) + v.shape[1:])
+    return columns

@@ -9,6 +9,12 @@ mesh via ``NamedSharding(mesh, P("data"))`` — see core/sharding_bridge.
 
 TPU adaptation (DESIGN §2): objects → fixed-capacity padded rows; skew shows
 up as padding waste, penalized by the ``key_distribution`` feature.
+
+Backends (DESIGN §5): ``backend="host"`` (default) dispatches with numpy;
+``backend="device"`` holds columns device-resident (jnp) behind the same
+``(m, capacity)`` layout, hashing keys through the fused Pallas
+``hash_partition`` kernel and scattering rows with a jax-backed re-bucket
+that consumes the kernel's ``(pids, histogram)`` output.
 """
 
 from __future__ import annotations
@@ -21,9 +27,12 @@ import numpy as np
 
 from ..core.partitioner import (HASH, PartitionerCandidate, RANDOM,
                                 ROUND_ROBIN)
+from .device_repartition import device_partition_ids, device_scatter_padded
 
 
 Columns = Dict[str, np.ndarray]
+
+BACKENDS = ("host", "device")
 
 
 @dataclass
@@ -49,18 +58,39 @@ class StoredDataset:
         mean = max(self.counts.mean(), 1e-9)
         return float(self.counts.max() / mean)
 
+    @property
+    def backend(self) -> str:
+        """"device" when any column is device-resident (a jax array)."""
+        import jax
+        return "device" if any(isinstance(v, jax.Array)
+                               for v in self.columns.values()) else "host"
+
     def gather(self) -> Columns:
         """Materialize back to flat rows (host-side, used by shuffles)."""
         out: Columns = {}
         for k, v in self.columns.items():
+            v = np.asarray(v)
             parts = [v[w, :self.counts[w]] for w in range(self.num_workers)]
             out[k] = np.concatenate(parts, axis=0)
         return out
 
+    def to_host(self) -> "StoredDataset":
+        """Copy with every column materialized as numpy (layout unchanged)."""
+        cols = {k: np.asarray(v) for k, v in self.columns.items()}
+        return StoredDataset(name=self.name, columns=cols,
+                             counts=self.counts, partitioner=self.partitioner,
+                             num_rows=self.num_rows, nbytes=self.nbytes,
+                             created_at=self.created_at)
+
 
 class PartitionStore:
-    def __init__(self, num_workers: int = 8):
+    def __init__(self, num_workers: int = 8, backend: str = "host",
+                 interpret: Optional[bool] = None):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
         self.m = num_workers
+        self.backend = backend
+        self.interpret = interpret      # None → auto (interpret off-TPU)
         self.datasets: Dict[str, StoredDataset] = {}
         self.write_log: List[Dict[str, Any]] = []
 
@@ -73,27 +103,11 @@ class PartitionStore:
         n = len(next(iter(data.values())))
         if partitioner is None:
             partitioner = PartitionerCandidate(graph=None, strategy=ROUND_ROBIN)
-        pids = np.asarray(partitioner.partition_ids(data, self.m)) \
-            if partitioner.strategy != RANDOM else \
-            np.random.default_rng(seed).integers(0, self.m, size=n)
-        pids = np.asarray(pids, np.int64)
 
-        order = np.argsort(pids, kind="stable")
-        sorted_pids = pids[order]
-        counts = np.bincount(sorted_pids, minlength=self.m)
-        cap = int(counts.max()) if n else 1
-        offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
-
-        columns: Columns = {}
-        for k, v in data.items():
-            v = np.asarray(v)
-            buf = np.zeros((self.m, cap) + v.shape[1:], v.dtype)
-            sv = v[order]
-            for w in range(self.m):
-                c = counts[w]
-                if c:
-                    buf[w, :c] = sv[offsets[w]:offsets[w] + c]
-            columns[k] = buf
+        if self.backend == "device":
+            columns, counts = self._dispatch_device(data, partitioner, n, seed)
+        else:
+            columns, counts = self._dispatch_host(data, partitioner, n, seed)
 
         nbytes = int(sum(np.asarray(v).nbytes for v in data.values()))
         ds = StoredDataset(name=name, columns=columns,
@@ -108,6 +122,50 @@ class PartitionStore:
         })
         return ds
 
+    # -- dispatch backends ---------------------------------------------------
+    def _host_pids(self, data: Columns, partitioner: PartitionerCandidate,
+                   n: int, seed: int) -> np.ndarray:
+        pids = np.asarray(partitioner.partition_ids(data, self.m)) \
+            if partitioner.strategy != RANDOM else \
+            np.random.default_rng(seed).integers(0, self.m, size=n)
+        return np.asarray(pids, np.int64)
+
+    def _dispatch_host(self, data, partitioner, n, seed):
+        """Host-side numpy dispatch: argsort by pid + per-worker copy."""
+        pids = self._host_pids(data, partitioner, n, seed)
+        order = np.argsort(pids, kind="stable")
+        sorted_pids = pids[order]
+        counts = np.bincount(sorted_pids, minlength=self.m)
+        cap = int(counts.max()) if n else 1
+        offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        columns: Columns = {}
+        for k, v in data.items():
+            v = np.asarray(v)
+            buf = np.zeros((self.m, cap) + v.shape[1:], v.dtype)
+            sv = v[order]
+            for w in range(self.m):
+                c = counts[w]
+                if c:
+                    buf[w, :c] = sv[offsets[w]:offsets[w] + c]
+            columns[k] = buf
+        return columns, counts
+
+    def _dispatch_device(self, data, partitioner, n, seed):
+        """Device dispatch (DESIGN §5): hash keys through the Pallas kernel,
+        re-bucket with a jax scatter consuming its (pids, histogram) output.
+        Keyless/range strategies keep their host pid computation but still
+        scatter on device, so the stored columns are device-resident."""
+        if partitioner.strategy == HASH and partitioner.graph is not None:
+            keys = partitioner.key_fn()(data)
+            pids, hist = device_partition_ids(keys, self.m,
+                                              interpret=self.interpret)
+            counts = np.asarray(hist).astype(np.int64)
+        else:
+            pids = self._host_pids(data, partitioner, n, seed)
+            counts = np.bincount(pids, minlength=self.m).astype(np.int64)
+        columns = device_scatter_padded(data, pids, counts)
+        return columns, counts
+
     def write_layout(self, name: str, flat_columns: Columns,
                      counts: np.ndarray,
                      partitioner: Optional[PartitionerCandidate]
@@ -119,16 +177,22 @@ class PartitionStore:
         counts = np.asarray(counts, np.int64)
         n = int(counts.sum())
         cap = int(counts.max()) if n else 1
-        offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
-        columns: Columns = {}
-        for k, v in flat_columns.items():
-            v = np.asarray(v)
-            buf = np.zeros((self.m, cap) + v.shape[1:], v.dtype)
-            for w in range(self.m):
-                c = counts[w]
-                if c:
-                    buf[w, :c] = v[offsets[w]:offsets[w] + c]
-            columns[k] = buf
+        if self.backend == "device":
+            # rows are already segmented per worker ⇒ pids are implied
+            pids = np.repeat(np.arange(self.m, dtype=np.int32), counts)
+            columns = device_scatter_padded(flat_columns, pids, counts,
+                                            capacity=cap)
+        else:
+            offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            columns = {}
+            for k, v in flat_columns.items():
+                v = np.asarray(v)
+                buf = np.zeros((self.m, cap) + v.shape[1:], v.dtype)
+                for w in range(self.m):
+                    c = counts[w]
+                    if c:
+                        buf[w, :c] = v[offsets[w]:offsets[w] + c]
+                columns[k] = buf
         nbytes = int(sum(np.asarray(v).nbytes for v in flat_columns.values()))
         ds = StoredDataset(name=name, columns=columns, counts=counts,
                            partitioner=partitioner, num_rows=n, nbytes=nbytes)

@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names this TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 DEFAULT_BLOCK = 2048
 
 
@@ -79,7 +83,7 @@ def hash_partition(keys: jax.Array, num_partitions: int, *,
         out_shape=[jax.ShapeDtypeStruct((keys.shape[0],), jnp.int32),
                    jax.ShapeDtypeStruct((num_partitions,), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((num_partitions,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(keys)

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
@@ -70,6 +71,24 @@ def test_hash_partition_property(m, key_list):
     rp, rc = hash_partition_ref(keys, m)
     np.testing.assert_array_equal(np.asarray(pids), np.asarray(rp))
     np.testing.assert_array_equal(np.asarray(counts), np.asarray(rc))
+
+
+@given(st.integers(2, 32),
+       st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=400))
+@settings(max_examples=15, deadline=None)
+def test_device_rebucket_property(m, key_list):
+    """Kernel-driven re-bucket == host stable-sort re-bucket for any keys
+    (the engine device path's core invariant, DESIGN §5)."""
+    from repro.core.ir import _mix_hash
+    from repro.data.device_repartition import device_rebucket
+    keys = np.array(key_list, np.int64)
+    cols = {"k": keys, "v": np.arange(len(keys), dtype=np.float32)}
+    got, counts = device_rebucket(cols, keys, m)
+    pids = np.asarray(_mix_hash(jnp.asarray(keys))).astype(np.int64) % m
+    order = np.argsort(pids, kind="stable")
+    np.testing.assert_array_equal(counts, np.bincount(pids, minlength=m))
+    np.testing.assert_array_equal(got["v"], cols["v"][order])
+    np.testing.assert_array_equal(got["__key__"], keys[order])
 
 
 def test_hash_partition_matches_store_dispatch():

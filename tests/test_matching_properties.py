@@ -1,6 +1,9 @@
 """Property tests for Alg. 4: soundness + self-match completeness."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (HistoryStore, Workload, enumerate_candidates,

@@ -1,6 +1,9 @@
 """PartitionStore invariants (hypothesis property tests)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Workload, enumerate_candidates
@@ -62,3 +65,36 @@ def test_round_robin_balance():
     ds = store.write("d", {"k": np.arange(800)})
     assert ds.skew() == 1.0          # perfectly balanced
     assert ds.partitioner.strategy == ROUND_ROBIN
+
+
+# -- device backend (DESIGN §5) ----------------------------------------------
+
+@given(st.integers(2, 12),
+       st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=300),
+       st.sampled_from(["hash", "rr", "random"]))
+@settings(max_examples=20, deadline=None)
+def test_device_write_matches_host(m, keys, strategy):
+    """Same data + partitioner ⇒ device store layout == host store layout,
+    bit for bit (counts, padded buffers, gathered rows)."""
+    keys = np.array(keys, np.int64)
+    vals = np.arange(len(keys), dtype=np.float32)
+    if strategy == "hash":
+        cand = _keyed_candidate()
+    else:
+        cand = PartitionerCandidate(
+            graph=None,
+            strategy=ROUND_ROBIN if strategy == "rr" else RANDOM)
+    data = {"k": keys, "v": vals}
+    ds_h = PartitionStore(num_workers=m).write("d", data, cand)
+    ds_d = PartitionStore(num_workers=m, backend="device").write(
+        "d", data, cand)
+
+    assert ds_d.backend == "device"
+    np.testing.assert_array_equal(ds_h.counts, ds_d.counts)
+    for k in ds_h.columns:
+        np.testing.assert_array_equal(ds_h.columns[k],
+                                      np.asarray(ds_d.columns[k]))
+    gh, gd = ds_h.gather(), ds_d.gather()
+    for k in gh:
+        assert gh[k].dtype == gd[k].dtype
+        np.testing.assert_array_equal(gh[k], gd[k])
