@@ -11,6 +11,7 @@ number maps it onto the paper's cluster setting.
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -21,6 +22,17 @@ from repro.core.advisor import GreedySelector
 from repro.data.partition_store import PartitionStore
 
 NET_BW = 1.25e9      # 10 Gbps
+
+# `scripts/verify.sh --bench` sets LACHESIS_BENCH_SMOKE=1: suites shrink
+# their synthetic inputs so the whole run is a CI-sized smoke pass.  The
+# headline device-repartition rows keep their full N (they are seconds-scale
+# and the perf trajectory is diffed on them across BENCH_*.json snapshots).
+SMOKE = os.environ.get("LACHESIS_BENCH_SMOKE", "") not in ("", "0")
+
+
+def scale(n: int, smoke_n: int) -> int:
+    """Full size normally, `smoke_n` under LACHESIS_BENCH_SMOKE=1."""
+    return min(n, smoke_n) if SMOKE else n
 
 
 def run_consumer(store: PartitionStore, workload, repeats: int = 3,

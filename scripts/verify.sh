@@ -4,12 +4,38 @@
 # with jax pinned to the CPU backend so Pallas kernels take the interpret
 # path.
 #
-# Usage: scripts/verify.sh [extra pytest args]
+# Usage: scripts/verify.sh [--bench [BENCH_tag.json]] [extra pytest args]
+#
+#   --bench   after the tests, run the benchmark suite in smoke mode
+#             (LACHESIS_BENCH_SMOKE=1: synthetic inputs shrunk to CI size;
+#             the headline device-repartition rows keep their full N so the
+#             perf trajectory stays comparable across BENCH_*.json
+#             snapshots).  Writes BENCH_smoke.json unless a path is given.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+BENCH_JSON=""
+RUN_BENCH=0
+if [[ "${1:-}" == "--bench" ]]; then
+    RUN_BENCH=1
+    shift
+    if [[ "${1:-}" == *.json ]]; then
+        BENCH_JSON="$1"
+        shift
+    else
+        BENCH_JSON="BENCH_smoke.json"
+    fi
+fi
 
 python -m pip install -q -r requirements-dev.txt || \
     echo "WARN: dev deps not installed (offline?) — property tests will skip"
 
 JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q "$@"
+
+if [[ "$RUN_BENCH" == 1 ]]; then
+    echo "== bench smoke → $BENCH_JSON"
+    JAX_PLATFORMS=cpu LACHESIS_BENCH_SMOKE=1 \
+        PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.run --json "$BENCH_JSON"
+fi

@@ -14,9 +14,12 @@ restriction: the right side must have unique keys (all paper workloads —
 authors, ranks, matrix blocks — satisfy this); documented in DESIGN.md §3.
 
 Backends (DESIGN §5): ``backend="host"`` repartitions with numpy;
-``backend="device"`` routes every hash repartition through the fused Pallas
-``hash_partition`` kernel plus a jax-backed re-bucket (interpret mode on
-CPU), bit-identical to the host path.
+``backend="device"`` routes every hash repartition through one cached
+single-pass shuffle plan (hash → counting-sort permutation → packed
+gather; the fused Pallas kernels on TPU), bit-identical to the host path,
+and relays device-resident flats (``TableVal.device_columns``) from scans
+of device-backed stores through repartitions into store writes so the
+chain never re-uploads payload bytes.
 """
 
 from __future__ import annotations
@@ -30,7 +33,8 @@ import numpy as np
 from .ir import IRGraph, resolve_fn
 from .matching import partitioning_match
 from .partitioner import PartitionerCandidate, merge, search
-from ..data.device_repartition import device_rebucket
+from ..data.device_repartition import device_flat_columns, \
+    device_rebucket_full
 from ..data.partition_store import BACKENDS, PartitionStore, StoredDataset
 
 Columns = Dict[str, np.ndarray]
@@ -38,10 +42,18 @@ Columns = Dict[str, np.ndarray]
 
 @dataclass
 class TableVal:
-    """A set-valued intermediate: flat columns + per-worker segmentation."""
+    """A set-valued intermediate: flat columns + per-worker segmentation.
+
+    ``device_columns`` is the device-to-device relay (DESIGN §5): flat
+    jax-array copies of (a subset of) ``columns`` left on device by a scan
+    of a device-backed dataset or by a device repartition.  Row-preserving
+    nodes pass it through; the next device stage (repartition, store write)
+    consumes it instead of re-uploading the host columns.  Any row-changing
+    op (join, aggregate, filter, flatten, map) drops it."""
     columns: Columns
     counts: np.ndarray                       # (m,) rows per worker segment
     partitioner: Optional[PartitionerCandidate] = None   # current layout
+    device_columns: Optional[Columns] = None             # flat jax arrays
 
     @property
     def num_rows(self) -> int:
@@ -116,7 +128,9 @@ class Engine:
             if kind == "scan":
                 ds = self.store.read(node.params["dataset"])
                 flat = ds.gather()
-                vals[nid] = TableVal(flat, ds.counts.copy(), ds.partitioner)
+                dev = device_flat_columns(ds) if backend == "device" else None
+                vals[nid] = TableVal(flat, ds.counts.copy(), ds.partitioner,
+                                     device_columns=dev)
             elif kind == "partition":
                 vals[nid] = self._exec_partition(g, nid, cands_by_pnode,
                                                  vals, stats, backend)
@@ -136,7 +150,8 @@ class Engine:
                 cols = {k: v for k, v in tv.columns.items()
                         if k != "__key__"}
                 self.store.write_layout(node.params["dataset"], cols,
-                                        tv.counts, tv.partitioner)
+                                        tv.counts, tv.partitioner,
+                                        device_columns=tv.device_columns)
                 vals[nid] = tv
             else:
                 # lambda nodes: evaluate over parent values (columns/TableVal)
@@ -176,7 +191,8 @@ class Engine:
             if nid in m.partition_nodes:
                 stats.shuffles_elided += 1
                 out = TableVal(dict(table.columns), table.counts.copy(),
-                               table.partitioner)
+                               table.partitioner,
+                               device_columns=table.device_columns)
                 out.columns["__key__"] = key_vals
                 return out                   # layout already correct
 
@@ -184,15 +200,19 @@ class Engine:
         from .ir import _mix_hash
         strategy = g.nodes[nid].params.get("strategy", "hash")
         if backend == "device" and strategy == "hash" and key_vals.size:
-            # DESIGN §5: fused Pallas hash+histogram, jax re-bucket
-            new_cols, counts = device_rebucket(table.columns, key_vals,
-                                               table.m,
-                                               interpret=self.interpret)
+            # DESIGN §5: one jitted plan — fused hash + histogram +
+            # counting-sort permutation + packed gather; upstream device
+            # flats (scan of a device store) feed it without re-upload
+            res = device_rebucket_full(table.columns, key_vals, table.m,
+                                       interpret=self.interpret,
+                                       device_columns=table.device_columns)
             stats.shuffles_performed += 1
             stats.device_repartitions += 1
             stats.shuffle_bytes += int(table.nbytes() * (table.m - 1)
                                        / table.m)
-            return TableVal(new_cols, counts, cand or table.partitioner)
+            return TableVal(res.columns, res.counts,
+                            cand or table.partitioner,
+                            device_columns=res.device_columns)
         if strategy == "range":
             lo, hi = key_vals.min(), key_vals.max()
             width = max((hi - lo) / table.m, 1e-9)

@@ -10,7 +10,10 @@ dry-run by counting collectives in the lowered HLO.
 :func:`device_put_dataset` closes the loop for the device-resident
 repartition path (DESIGN §5): a store dataset's ``(m, capacity, ...)``
 columns are placed with the leading worker axis sharded over the mesh, so a
-worker-local consumer reads only its own shard.
+worker-local consumer reads only its own shard.  Columns that are already
+device-resident (device store writes, d2d repartition outputs) are re-placed
+device-to-device; ``PartitionStore.repartition(..., mesh=...)`` uses this so
+repartitioned datasets stay mesh-placed.
 """
 
 from __future__ import annotations
@@ -72,6 +75,13 @@ def device_put_dataset(mesh: Mesh, ds,
             f"m={ds.num_workers} not divisible by mesh data extent {extent}")
     cols = {}
     for k, v in ds.columns.items():
+        # already-device-resident columns (device write / d2d repartition
+        # output) are re-placed device-to-device — no host round-trip
+        if isinstance(v, jax.Array):
+            sh = sharding_for(mesh, ds.partitioner, data_axes,
+                              extra_dims=v.ndim - 2)
+            cols[k] = jax.device_put(v, sh)
+            continue
         v_np = np.asarray(v)
         if dtype_roundtrips(v_np.dtype):
             sh = sharding_for(mesh, ds.partitioner, data_axes,

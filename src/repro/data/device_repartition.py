@@ -1,42 +1,73 @@
 """Device-resident repartition path (DESIGN §5).
 
 The paper's dispatch hot spot — hash the partition key, histogram the
-destinations, re-bucket every column — runs here through the fused Pallas
-``hash_partition`` kernel instead of host-side numpy.  Two consumers:
+destinations, re-bucket every column — runs here as a **single-pass device
+shuffle**: one jitted pipeline per shape bucket that hashes, counting-sorts
+and permutes/scatters without ever leaving the device.  Three consumers:
 
 * the :class:`~repro.data.partition_store.PartitionStore` device write path
   (:func:`device_scatter_padded` — scatter flat rows into the persistent
-  ``(m, capacity, ...)`` layout), and
-* the engine's repartition node (:func:`device_rebucket` — re-bucket a flat
-  intermediate into worker segments).
+  ``(m, capacity, ...)`` layout),
+* the engine's repartition node (:func:`device_rebucket` /
+  :func:`device_rebucket_full` — re-bucket a flat intermediate into worker
+  segments), and
+* :func:`device_repartition_dataset` — the device-to-device fast path that
+  reshuffles a device-resident ``StoredDataset`` into a new layout without
+  a host ``gather()``.
 
-Both consume the kernel's ``(pids, histogram)`` output directly, so the
-histogram the store needs to size buffers is produced in the same VMEM pass
-that hashes the keys.
+**Dispatch plans.**  A :class:`ShufflePlan` is the jitted
+hash → counting-sort → permute/scatter pipeline for one
+``(shape-bucket, dtype-set, m, capacity)`` key.  Row counts are padded up to
+a power-of-two bucket and the valid count rides along as a traced scalar
+(scalar-prefetched into the kernel), so repeated shuffles of any N in the
+bucket reuse one trace — ``plan_cache_stats()`` exposes the trace counter
+the no-retrace tests assert on.  Same-dtype round-trippable columns are
+packed into a single ``(B, C)`` matrix, so K columns cost one gather/scatter
+and one host sync, not K.
 
-Bit-identical guarantee: the kernel applies the same Wang hash as
-``core.ir._mix_hash`` and re-bucketing is a *stable* sort by partition id
-followed by a pure permutation gather — no arithmetic touches the payload —
-so device results match the host numpy path exactly.  With jax's default
-x64-disabled config, 64-bit payload columns cannot round-trip through jnp;
-those are gathered host-side by the device-computed permutation (hybrid
+**Counting sort, not argsort.**  Each row's destination is its stable
+counting-sort position: per-partition base offsets from an exclusive prefix
+sum over the histogram plus a running stable rank — an O(N) placement
+replacing the O(N log N) ``jnp.argsort`` + per-column eager gather the old
+path paid.  Two executions of the same math, picked per backend
+(``mode``):
+
+* ``"fused"`` (TPU default) — everything inside one jit: the
+  ``hash_partition_padded`` kernel emits pids with padding routed to an
+  overflow partition ``m``, ``scatter_perm`` computes the permutation with
+  an in-kernel prefix sum, and the packed gather/scatter rides the same
+  trace.  One device dispatch per shuffle.
+* ``"hostperm"`` (CPU default) — XLA-on-CPU sorts/scatters are an order of
+  magnitude slower than numpy, so the permutation is computed host-side
+  (numpy radix sort over small-int pids: O(N)) and only the packed
+  gather — the part XLA-CPU is actually good at — stays jitted.  Plans are
+  still cached and traced exactly once per bucket.
+
+Bit-identical guarantee: both modes apply the same Wang hash as
+``core.ir._mix_hash`` and reproduce the stable-sort order exactly — no
+arithmetic touches the payload — so device results match the host numpy
+path bit-for-bit (asserted by the kernel, plan, and property tests).  With
+jax's default x64-disabled config, 64-bit payload columns cannot round-trip
+through jnp; those are gathered host-side by the same permutation (hybrid
 gather), preserving exact bits and dtypes either way.
-
-On CPU the kernel runs in ``interpret`` mode (auto-detected) so CI covers
-the identical code path the TPU executes compiled.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.hash_partition.ops import partition_ids
+from ..kernels.hash_partition.ops import (padded_partition_ids,
+                                          partition_ids, scatter_permutation)
 
-Columns = Dict[str, np.ndarray]
+Columns = Dict[str, Any]
+
+MODES = ("fused", "hostperm")
 
 
 def default_interpret() -> bool:
@@ -46,6 +77,28 @@ def default_interpret() -> bool:
 
 def _resolve_interpret(interpret: Optional[bool]) -> bool:
     return default_interpret() if interpret is None else interpret
+
+
+def default_use_kernel() -> bool:
+    """Kernels compile on TPU; elsewhere the jitted jnp oracle is the
+    bit-identical stand-in (interpret-mode kernels are correctness coverage,
+    exercised explicitly by the kernel tests)."""
+    return jax.default_backend() == "tpu"
+
+
+def _resolve_use_kernel(use_kernel: Optional[bool]) -> bool:
+    return default_use_kernel() if use_kernel is None else use_kernel
+
+
+def default_mode() -> str:
+    return "fused" if jax.default_backend() == "tpu" else "hostperm"
+
+
+def _resolve_mode(mode: Optional[str]) -> str:
+    mode = default_mode() if mode is None else mode
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}")
+    return mode
 
 
 def dtype_roundtrips(dtype) -> bool:
@@ -60,9 +113,17 @@ def as_kernel_keys(keys) -> jax.Array:
 
     Mirrors ``core.ir._mix_hash``'s dtype handling exactly (float32 bits are
     reinterpreted, everything else is cast to int32 with jnp's canonical
-    truncation) so kernel pids equal host pids bit-for-bit.
+    truncation) so kernel pids equal host pids bit-for-bit.  Device-resident
+    keys are normalized with jnp ops — no host round-trip.
     """
-    k = np.asarray(keys)
+    if isinstance(keys, jax.Array):
+        k = keys.reshape(-1)
+        if jnp.issubdtype(k.dtype, jnp.integer):
+            return k.astype(jnp.int32)
+        if k.dtype == jnp.float32:
+            return k.view(jnp.int32)
+        return k.astype(jnp.int32)
+    k = np.asarray(keys).reshape(-1)
     if np.issubdtype(k.dtype, np.integer):
         return jnp.asarray(k.astype(np.int32))
     if k.dtype == np.float64:                     # jnp canonicalizes f64→f32
@@ -72,9 +133,41 @@ def as_kernel_keys(keys) -> jax.Array:
     return jnp.asarray(k.astype(np.int32))
 
 
+def _host_kernel_keys(keys) -> np.ndarray:
+    """Host-side twin of :func:`as_kernel_keys` (int32, same truncation)."""
+    k = np.asarray(keys).reshape(-1)
+    if np.issubdtype(k.dtype, np.integer) or k.dtype == np.bool_:
+        return k.astype(np.int32)
+    if k.dtype == np.float64:
+        k = k.astype(np.float32)
+    if k.dtype == np.float32:
+        return k.view(np.int32)
+    return k.astype(np.int32)
+
+
+def _host_wang(x: np.ndarray) -> np.ndarray:
+    """Numpy twin of ref.wang_hash — identical uint32 arithmetic."""
+    with np.errstate(over="ignore"):
+        x = x.astype(np.uint32)
+        x = (x ^ np.uint32(61)) ^ (x >> np.uint32(16))
+        x = x * np.uint32(9)
+        x = x ^ (x >> np.uint32(4))
+        x = x * np.uint32(0x27D4EB2D)
+        x = x ^ (x >> np.uint32(15))
+    return x
+
+
+@partial(jax.jit, static_argnames=("num_partitions",))
+def _hash_pids_jit(keys, num_partitions: int) -> jax.Array:
+    """Elementwise hash → pid, no histogram (the histogram is cheaper on
+    the host when the permutation is computed there anyway)."""
+    from ..kernels.hash_partition.ref import wang_hash
+    return (wang_hash(keys) % jnp.uint32(num_partitions)).astype(jnp.int32)
+
+
 def device_partition_ids(keys, num_partitions: int, *,
                          interpret: Optional[bool] = None,
-                         use_kernel: bool = True
+                         use_kernel: Optional[bool] = None
                          ) -> Tuple[jax.Array, jax.Array]:
     """Kernel dispatch: keys → (pids (N,) int32, histogram (m,) int32)."""
     keys = as_kernel_keys(keys)
@@ -83,79 +176,522 @@ def device_partition_ids(keys, num_partitions: int, *,
                 jnp.zeros(num_partitions, jnp.int32))
     return partition_ids(keys, num_partitions,
                          interpret=_resolve_interpret(interpret),
-                         use_kernel=use_kernel)
+                         use_kernel=_resolve_use_kernel(use_kernel))
 
 
-def _take(v: np.ndarray, order: jax.Array) -> np.ndarray:
-    """Permutation gather — on device when the dtype round-trips, else
-    host-side with the device-computed order (hybrid gather, DESIGN §5)."""
-    v = np.asarray(v)
-    if dtype_roundtrips(v.dtype):
-        return np.asarray(jnp.take(jnp.asarray(v), order, axis=0))
-    return v[np.asarray(order)]
+def shuffle_pids(keys, num_partitions: int, *,
+                 interpret: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None,
+                 mode: Optional[str] = None
+                 ) -> Tuple[Any, np.ndarray]:
+    """Mode-matched pid computation: ``(pids, counts (m,) np.int64)``.
+
+    fused → kernel/oracle hash+histogram on device (pids stay device);
+    hostperm → device keys hash through a tiny jitted elementwise pass, host
+    keys hash with the numpy Wang twin; histogram via np.bincount.
+    """
+    mode = _resolve_mode(mode)
+    if mode == "fused":
+        pids, hist = device_partition_ids(keys, num_partitions,
+                                          interpret=interpret,
+                                          use_kernel=use_kernel)
+        return pids, np.asarray(hist).astype(np.int64)
+    if isinstance(keys, jax.Array):
+        # bucket the key length so the elementwise jit never retraces per N
+        k = as_kernel_keys(keys)
+        n = int(k.shape[0])
+        B = shape_bucket(n)
+        k_p = k if n == B else jnp.zeros(B, jnp.int32).at[:n].set(k)
+        pids = np.asarray(_hash_pids_jit(k_p, num_partitions))[:n]
+    else:
+        pids = (_host_wang(_host_kernel_keys(keys))
+                % np.uint32(num_partitions)).astype(np.int32)
+    counts = np.bincount(pids, minlength=num_partitions).astype(np.int64)
+    return pids, counts
+
+
+# ---------------------------------------------------------------------------
+# Host counting-sort placement (shared with the store's host dispatch)
+# ---------------------------------------------------------------------------
+
+def host_counting_order(pids: np.ndarray) -> np.ndarray:
+    """Stable order of rows grouped by pid — numpy radix sort (O(N)) when
+    the pids fit in int16, stable mergesort otherwise.  Identical output to
+    ``np.argsort(pids, kind="stable")`` either way."""
+    if pids.size and pids.max(initial=0) < np.iinfo(np.int16).max:
+        return np.argsort(pids.astype(np.int16), kind="stable")
+    return np.argsort(pids, kind="stable")
+
+
+def host_counting_sort_dest(pids: np.ndarray, counts: np.ndarray,
+                            cap: int) -> np.ndarray:
+    """Flat destination slot (pid * cap + stable rank-within-pid) of every
+    row — one vectorized counting-sort placement shared by all columns."""
+    n = pids.shape[0]
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    order = host_counting_order(pids)
+    rank = np.empty(n, np.int64)
+    rank[order] = np.arange(n, dtype=np.int64) - offsets[pids[order]]
+    return pids * cap + rank
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets and column packing
+# ---------------------------------------------------------------------------
+
+def shape_bucket(n: int) -> int:
+    """Pad row counts up to a power of two so nearby Ns share one trace."""
+    return max(8, 1 << (int(n) - 1).bit_length())
+
+
+@dataclass
+class _Pack:
+    """Same-dtype round-trippable columns flattened into one (rows, C)
+    matrix — one upload + one gather/scatter + one download per dtype."""
+    dtype: np.dtype
+    width: int                                   # C = sum of member widths
+    members: List[Tuple[str, Tuple[int, ...], int, int]]  # name, trail, c0, c1
+    data: Any = None                             # (rows, C) np or jax array
+
+
+def _split_columns(columns: Columns,
+                   device_columns: Optional[Columns] = None
+                   ) -> Tuple[List[Tuple[str, Any]], List[Tuple[str, Any]]]:
+    """(device-eligible cols, host-only cols); device-resident copies from
+    ``device_columns`` are preferred so an upstream device stage's output
+    feeds the next shuffle without re-uploading."""
+    dev, host = [], []
+    for k, v in columns.items():
+        src = v
+        if device_columns is not None and k in device_columns:
+            src = device_columns[k]
+        dt = src.dtype if isinstance(src, jax.Array) else np.asarray(v).dtype
+        if dtype_roundtrips(dt):
+            dev.append((k, src))
+        else:
+            host.append((k, np.asarray(v)))
+    return dev, host
+
+
+def _build_packs(dev_cols: List[Tuple[str, Any]], n: int,
+                 rows: int) -> List[_Pack]:
+    """Group device-eligible columns by dtype into (rows, C) pack matrices;
+    rows beyond n are zero padding (never read back)."""
+    groups: Dict[str, _Pack] = {}
+    for name, v in dev_cols:
+        dt = np.dtype(str(v.dtype))
+        trail = tuple(v.shape[1:])
+        w = int(np.prod(trail)) if trail else 1
+        p = groups.setdefault(str(dt), _Pack(dtype=dt, width=0, members=[]))
+        p.members.append((name, trail, p.width, p.width + w))
+        p.width += w
+    packs = sorted(groups.values(), key=lambda p: str(p.dtype))
+    by_name = dict(dev_cols)
+    for p in packs:
+        on_device = any(isinstance(by_name[nm], jax.Array)
+                        for nm, *_ in p.members)
+        if on_device:         # keep the pack on device — no host round-trip
+            flat = [jnp.asarray(by_name[nm]).reshape(n, -1)
+                    for nm, *_ in p.members]
+            cat = flat[0] if len(flat) == 1 else jnp.concatenate(flat, axis=1)
+            p.data = jnp.zeros((rows, p.width), p.dtype).at[:n].set(cat)
+        else:
+            buf = np.zeros((rows, p.width), p.dtype)
+            for nm, _trail, c0, c1 in p.members:
+                buf[:n, c0:c1] = np.asarray(by_name[nm]).reshape(n, -1)
+            p.data = buf                     # one jnp upload at call time
+    return packs
+
+
+def _pack_spec(packs: List[_Pack]) -> Tuple[Tuple[str, int], ...]:
+    return tuple((str(p.dtype), p.width) for p in packs)
+
+
+# ---------------------------------------------------------------------------
+# ShufflePlan: the jitted permute/scatter pipelines, cached per shape bucket
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ShufflePlan:
+    """One compiled dispatch plan, keyed on
+    (kind, shape-bucket, dtype-set, m, capacity, mode)."""
+    key: Tuple
+    fn: Callable = None
+    traces: int = 0          # bumped inside the traced body — retrace counter
+    calls: int = 0
+
+
+_PLANS: Dict[Tuple, ShufflePlan] = {}
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    """(plans, traces, calls) across the process — flat ``traces`` across
+    repeated same-shape shuffles is the no-retrace guarantee."""
+    return {"plans": len(_PLANS),
+            "traces": sum(p.traces for p in _PLANS.values()),
+            "calls": sum(p.calls for p in _PLANS.values())}
+
+
+def clear_plan_cache() -> None:
+    _PLANS.clear()
+
+
+def _get_plan(key: Tuple, build: Callable[[ShufflePlan], Callable]
+              ) -> ShufflePlan:
+    plan = _PLANS.get(key)
+    if plan is None:
+        plan = ShufflePlan(key=key)
+        plan.fn = jax.jit(build(plan))
+        _PLANS[key] = plan
+    return plan
+
+
+def _fused_rebucket_plan(m: int, B: int, spec: Tuple, interpret: bool,
+                         use_kernel: bool) -> ShufflePlan:
+    """keys + dynamic n + packs → (order, counts, gathered packs), one jit:
+    hash kernel (padding → overflow partition m) → counting-sort kernel →
+    permutation inversion → packed gather."""
+    key = ("rebucket", m, B, spec, interpret, use_kernel, "fused")
+
+    def build(plan: ShufflePlan):
+        def fn(keys, n, packs):
+            plan.traces += 1
+            pids, counts_full = padded_partition_ids(
+                keys, n, m, interpret=interpret, use_kernel=use_kernel)
+            dest = scatter_permutation(pids, counts_full,
+                                       interpret=interpret,
+                                       use_kernel=use_kernel)
+            # invert the counting-sort placement → gather permutation
+            order = jnp.zeros(B, jnp.int32).at[dest].set(
+                jnp.arange(B, dtype=jnp.int32))
+            outs = tuple(jnp.take(p, order, axis=0) for p in packs)
+            return order, counts_full[:m], outs
+        return fn
+
+    return _get_plan(key, build)
+
+
+def _hostperm_rebucket_plan(m: int, B: int, spec: Tuple) -> ShufflePlan:
+    """host-computed counting-sort order + packs → gathered packs (the one
+    stage XLA-on-CPU is fast at stays jitted and retrace-free)."""
+    key = ("rebucket", m, B, spec, "hostperm")
+
+    def build(plan: ShufflePlan):
+        def fn(order, packs):
+            plan.traces += 1
+            return tuple(jnp.take(p, order, axis=0) for p in packs)
+        return fn
+
+    return _get_plan(key, build)
+
+
+def _fused_scatter_plan(m: int, B: int, R: int, spec: Tuple,
+                        interpret: bool, use_kernel: bool) -> ShufflePlan:
+    """pids + counts + dynamic (n, cap) + packs → flat (R, C) layout packs.
+
+    ``cap`` rides along as a traced scalar and the output rows are bucketed
+    to ``R ≥ m * cap`` (+1 trash slot), so same-shape writes with different
+    key skew — different ``counts.max()`` — reuse one trace; the caller
+    slices ``[:m * cap]`` eagerly outside the jit."""
+    key = ("scatter", m, B, R, spec, interpret, use_kernel, "fused")
+
+    def build(plan: ShufflePlan):
+        def fn(pids, counts, n, cap, packs):
+            plan.traces += 1
+            counts_full = jnp.concatenate(
+                [counts.astype(jnp.int32),
+                 (jnp.int32(B) - n.astype(jnp.int32)).reshape(1)])
+            dest = scatter_permutation(pids, counts_full,
+                                       interpret=interpret,
+                                       use_kernel=use_kernel)
+            offs = jnp.cumsum(counts_full) - counts_full
+            rank = dest - offs[pids]
+            # real rows → (pid, rank) slot; padding rows → the trash slot R
+            flat_dest = jnp.where(pids < m, pids * cap + rank, R)
+            outs = tuple(
+                jnp.zeros((R + 1, p.shape[1]), p.dtype)
+                .at[flat_dest].set(p)[:R]
+                for p in packs)
+            return flat_dest, outs
+        return fn
+
+    return _get_plan(key, build)
+
+
+def _hostperm_scatter_plan(m: int, B: int, R: int,
+                           spec: Tuple) -> ShufflePlan:
+    """Gather-formulated padded scatter: ``inv`` maps every (worker, slot)
+    to its source row (B = the all-zeros trash row for empty slots), so the
+    layout materializes as one packed gather — XLA-CPU scatters are slow,
+    its gathers are not.  Output rows are bucketed to ``R ≥ m * cap`` so
+    different capacities share one trace."""
+    key = ("scatter", m, B, R, spec, "hostperm")
+
+    def build(plan: ShufflePlan):
+        def fn(inv, packs):
+            plan.traces += 1
+            return tuple(jnp.take(p, inv, axis=0) for p in packs)
+        return fn
+
+    return _get_plan(key, build)
+
+
+# ---------------------------------------------------------------------------
+# Re-bucket (engine repartition node)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ShuffleResult:
+    """Output of a device shuffle: host-materialized columns for the
+    engine's columnar compute plus the device-resident flats so a chained
+    device stage (store write, next shuffle) skips the re-upload."""
+    columns: Columns                     # np columns incl "__key__"
+    counts: np.ndarray                   # (m,) int64
+    device_columns: Optional[Columns] = None    # flat jax arrays (subset)
+
+
+def device_rebucket_full(columns: Columns, key_vals, num_partitions: int, *,
+                         interpret: Optional[bool] = None,
+                         use_kernel: Optional[bool] = None,
+                         mode: Optional[str] = None,
+                         device_columns: Optional[Columns] = None
+                         ) -> ShuffleResult:
+    """Re-bucket flat columns by hash(key) % m through one cached plan.
+
+    Single-pass shuffle (hash → histogram → counting-sort permutation →
+    packed gather); K same-dtype columns cost one gather and one host sync.
+    ``device_columns`` (flat jax arrays from an upstream device stage) are
+    consumed in place of re-uploading the matching host columns.
+    """
+    interpret = _resolve_interpret(interpret)
+    use_kernel = _resolve_use_kernel(use_kernel)
+    mode = _resolve_mode(mode)
+    key_arr = key_vals if isinstance(key_vals, jax.Array) \
+        else np.asarray(key_vals).reshape(-1)
+    n = int(key_arr.shape[0])
+    m = int(num_partitions)
+    if n == 0:
+        out = {k: np.asarray(v).copy() for k, v in columns.items()}
+        out["__key__"] = np.asarray(key_arr)
+        return ShuffleResult(out, np.zeros(m, np.int64), None)
+
+    cols = dict(columns)
+    cols["__key__"] = key_arr
+    if device_columns:
+        # a relayed "__key__" is the *previous* shuffle's key — never let it
+        # shadow the key this node is partitioning on
+        device_columns = {k: v for k, v in device_columns.items()
+                          if k != "__key__"}
+        if isinstance(key_arr, jax.Array):
+            device_columns["__key__"] = key_arr
+    dev_cols, host_cols = _split_columns(cols, device_columns)
+    B = shape_bucket(n)
+    packs = _build_packs(dev_cols, n, B)
+    spec = _pack_spec(packs)
+
+    if mode == "fused":
+        keys_p = jnp.zeros(B, jnp.int32).at[:n].set(as_kernel_keys(key_arr))
+        plan = _fused_rebucket_plan(m, B, spec, interpret, use_kernel)
+        plan.calls += 1
+        order_d, counts_d, outs_d = plan.fn(
+            keys_p, jnp.int32(n), tuple(jnp.asarray(p.data) for p in packs))
+        # one transfer for everything the host needs
+        order_np, counts_np, outs_np = jax.device_get(
+            (order_d, counts_d, outs_d))
+        order_valid = order_np[:n]
+        counts_np = counts_np.astype(np.int64)
+    else:
+        pids_np, counts_np = shuffle_pids(key_arr, m, mode="hostperm")
+        order_valid = host_counting_order(pids_np)
+        order_p = np.concatenate(
+            [order_valid, np.arange(n, B)]).astype(np.int32)
+        plan = _hostperm_rebucket_plan(m, B, spec)
+        plan.calls += 1
+        outs_d = plan.fn(jnp.asarray(order_p),
+                         tuple(jnp.asarray(p.data) for p in packs))
+        outs_np = jax.device_get(outs_d)
+
+    out: Columns = {}
+    device_out: Columns = {}
+    for p, mat_d, mat_np in zip(packs, outs_d, outs_np):
+        for name, trail, c0, c1 in p.members:
+            out[name] = np.ascontiguousarray(
+                mat_np[:n, c0:c1]).reshape((n,) + trail)
+            device_out[name] = mat_d[:n, c0:c1].reshape((n,) + trail)
+    for name, v in host_cols:
+        out[name] = v[order_valid]
+    return ShuffleResult(out, counts_np, device_out or None)
 
 
 def device_rebucket(columns: Columns, key_vals, num_partitions: int, *,
                     interpret: Optional[bool] = None,
-                    use_kernel: bool = True) -> Tuple[Columns, np.ndarray]:
-    """Re-bucket flat columns by hash(key) % m through the Pallas kernel.
+                    use_kernel: Optional[bool] = None,
+                    mode: Optional[str] = None
+                    ) -> Tuple[Columns, np.ndarray]:
+    """Compatibility wrapper: ``(new_columns incl "__key__", counts)`` —
+    the same contract as the engine's host-side shuffle."""
+    res = device_rebucket_full(columns, key_vals, num_partitions,
+                               interpret=interpret, use_kernel=use_kernel,
+                               mode=mode)
+    return res.columns, res.counts
 
-    Returns ``(new_columns incl "__key__", counts)`` — the same contract as
-    the engine's host-side shuffle (stable sort by pid + gather), with the
-    per-worker counts coming from the kernel's fused histogram.
-    """
-    key_vals = np.asarray(key_vals).reshape(-1)
-    n = key_vals.size
-    if n == 0:
-        out = {k: np.asarray(v).copy() for k, v in columns.items()}
-        out["__key__"] = key_vals
-        return out, np.zeros(num_partitions, np.int64)
-    pids, hist = device_partition_ids(key_vals, num_partitions,
-                                      interpret=interpret,
-                                      use_kernel=use_kernel)
-    order = jnp.argsort(pids, stable=True)
-    out = {k: _take(v, order) for k, v in columns.items()}
-    out["__key__"] = _take(key_vals, order)
-    return out, np.asarray(hist).astype(np.int64)
 
+# ---------------------------------------------------------------------------
+# Padded scatter (store write path)
+# ---------------------------------------------------------------------------
 
 def device_scatter_padded(flat_columns: Columns, pids, counts, *,
-                          capacity: Optional[int] = None) -> Columns:
+                          capacity: Optional[int] = None,
+                          interpret: Optional[bool] = None,
+                          use_kernel: Optional[bool] = None,
+                          mode: Optional[str] = None,
+                          device_columns: Optional[Columns] = None
+                          ) -> Columns:
     """Scatter flat rows into the persistent ``(m, capacity, ...)`` layout.
 
-    Consumes the kernel's ``(pids, histogram)`` pair: destination slot of row
-    i is ``(pids[i], rank-of-i-within-its-partition)``, computed as a stable
-    sort by pid plus an offset subtraction — one jnp scatter per column, no
-    per-worker host loop.  Round-trippable columns come back device-resident
-    (jax arrays); 64-bit columns are scattered host-side (hybrid).
+    One cached counting-sort plan per (bucket, dtype-set, m, capacity):
+    destination slot of row i is ``(pids[i], rank-of-i-within-its-
+    partition)``, materialized per dtype *pack* — K same-dtype columns cost
+    one scatter.  Round-trippable columns come back device-resident (jax
+    arrays); 64-bit columns are scattered host-side (hybrid).
+
+    An explicit ``capacity`` smaller than the fullest partition would
+    silently clamp/drop rows inside the scatter, so it raises instead.
     """
+    interpret = _resolve_interpret(interpret)
+    use_kernel = _resolve_use_kernel(use_kernel)
+    mode = _resolve_mode(mode)
     counts_np = np.asarray(counts).astype(np.int64)
     m = int(counts_np.shape[0])
     n = int(counts_np.sum())
-    cap = int(capacity) if capacity is not None else \
-        (int(counts_np.max()) if n else 1)
+    max_count = int(counts_np.max()) if n else 0
+    if capacity is not None and int(capacity) < max_count:
+        raise ValueError(
+            f"capacity={int(capacity)} < fullest partition ({max_count} "
+            f"rows): the scatter would silently drop/clamp overflowing rows")
+    cap = int(capacity) if capacity is not None else max_count
+    if n == 0:
+        cap = cap or 1
+        out: Columns = {}
+        for k, v in flat_columns.items():
+            v = np.asarray(v)
+            if dtype_roundtrips(v.dtype):      # stay device-backed
+                out[k] = jnp.zeros((m, cap) + v.shape[1:], v.dtype)
+            else:
+                out[k] = np.zeros((m, cap) + v.shape[1:], v.dtype)
+        return out
 
-    pids_j = jnp.asarray(np.asarray(pids).astype(np.int32))
-    order = jnp.argsort(pids_j, stable=True)
-    sorted_pids = jnp.take(pids_j, order)
-    offsets = jnp.asarray(
-        np.concatenate([[0], np.cumsum(counts_np)[:-1]]).astype(np.int32))
-    rank = jnp.arange(n, dtype=jnp.int32) - jnp.take(offsets, sorted_pids)
-    dest = sorted_pids.astype(jnp.int32) * cap + rank
+    dev_cols, host_cols = _split_columns(flat_columns, device_columns)
+    B = shape_bucket(n)
+    R = shape_bucket(m * cap)     # output-row bucket: cap is traced, not keyed
 
-    order_np = np.asarray(order)
-    dest_np = np.asarray(dest)
-    columns: Columns = {}
-    for k, v in flat_columns.items():
-        v = np.asarray(v)
-        if dtype_roundtrips(v.dtype):
-            vd = jnp.asarray(v)
-            sv = jnp.take(vd, order, axis=0)
-            buf = jnp.zeros((m * cap,) + v.shape[1:], vd.dtype)
-            columns[k] = buf.at[dest].set(sv).reshape(
-                (m, cap) + v.shape[1:])
+    if mode == "fused":
+        packs = _build_packs(dev_cols, n, B)
+        if isinstance(pids, jax.Array):
+            pids_p = jnp.full(B, m, jnp.int32).at[:n].set(
+                pids.astype(jnp.int32))
         else:
-            buf = np.zeros((m * cap,) + v.shape[1:], v.dtype)
-            buf[dest_np] = v[order_np]
-            columns[k] = buf.reshape((m, cap) + v.shape[1:])
+            buf = np.full(B, m, np.int32)
+            buf[:n] = np.asarray(pids).astype(np.int32)
+            pids_p = jnp.asarray(buf)
+        plan = _fused_scatter_plan(m, B, R, _pack_spec(packs), interpret,
+                                   use_kernel)
+        plan.calls += 1
+        flat_dest_d, outs = plan.fn(
+            pids_p, jnp.asarray(counts_np.astype(np.int32)), jnp.int32(n),
+            jnp.int32(cap), tuple(jnp.asarray(p.data) for p in packs))
+        flat_dest_np = None
+        if host_cols:
+            flat_dest_np = np.asarray(flat_dest_d)[:n]
+    else:
+        # rows [n:B] of each pack are zeros; row B is the explicit trash
+        # source every empty (worker, slot) cell gathers from
+        packs = _build_packs(dev_cols, n, B + 1)
+        pids_np = np.asarray(pids).astype(np.int64)
+        flat_dest_np = host_counting_sort_dest(pids_np, counts_np, cap)
+        inv = np.full(R, B, np.int32)
+        inv[flat_dest_np] = np.arange(n, dtype=np.int32)
+        plan = _hostperm_scatter_plan(m, B, R, _pack_spec(packs))
+        plan.calls += 1
+        outs = plan.fn(jnp.asarray(inv),
+                       tuple(jnp.asarray(p.data) for p in packs))
+
+    columns: Columns = {}
+    for p, mat in zip(packs, outs):
+        # eager slice from the row bucket down to the real (m, cap) layout
+        grid = mat[:m * cap].reshape(m, cap, p.width)
+        for name, trail, c0, c1 in p.members:
+            columns[name] = grid[:, :, c0:c1].reshape((m, cap) + trail)
+    for name, v in host_cols:
+        buf = np.zeros((m * cap + 1,) + v.shape[1:], v.dtype)
+        buf[flat_dest_np] = v
+        columns[name] = buf[:m * cap].reshape((m, cap) + v.shape[1:])
     return columns
+
+
+# ---------------------------------------------------------------------------
+# Device-to-device dataset repartition (store fast path)
+# ---------------------------------------------------------------------------
+
+def _valid_slot_index(ds) -> np.ndarray:
+    """Flat indices of the valid slots of a ``(m, capacity, ...)`` layout in
+    worker-major order — the exact row order ``StoredDataset.gather()``
+    produces.  Single source of truth for every flatten below (the
+    bit-identical guarantee hangs on this ordering)."""
+    cap = ds.capacity
+    counts = np.asarray(ds.counts)
+    if not counts.sum():
+        return np.zeros(0, np.int64)
+    return np.concatenate(
+        [w * cap + np.arange(counts[w]) for w in range(ds.num_workers)])
+
+
+def flatten_dataset(ds, device_only: bool = False) -> Columns:
+    """Flatten a StoredDataset's ``(m, capacity, ...)`` columns back to flat
+    rows *without* a host round-trip: device-resident columns are gathered
+    with a device permutation over :func:`_valid_slot_index`; host columns
+    take the numpy path (skipped entirely under ``device_only``).
+    """
+    mw, cap = ds.num_workers, ds.capacity
+    idx = _valid_slot_index(ds)
+    idx_dev = None
+    out: Columns = {}
+    for k, v in ds.columns.items():
+        if isinstance(v, jax.Array):
+            if idx_dev is None:
+                idx_dev = jnp.asarray(idx.astype(np.int32))
+            out[k] = jnp.take(v.reshape((mw * cap,) + v.shape[2:]),
+                              idx_dev, axis=0)
+        elif not device_only:
+            v = np.asarray(v)
+            out[k] = v.reshape((mw * cap,) + v.shape[2:])[idx]
+    return out
+
+
+def device_flat_columns(ds) -> Optional[Columns]:
+    """The device-resident subset of :func:`flatten_dataset` (engine scan
+    seeds its d2d chain with these), computed without touching host cols."""
+    return flatten_dataset(ds, device_only=True) or None
+
+
+def device_repartition_dataset(ds, partitioner, num_partitions: int, *,
+                               interpret: Optional[bool] = None,
+                               use_kernel: Optional[bool] = None,
+                               mode: Optional[str] = None
+                               ) -> Tuple[Columns, np.ndarray]:
+    """Device-to-device repartition: device-resident StoredDataset → new
+    ``(m, capacity, ...)`` device layout, no host gather/concatenate.
+
+    Valid rows are gathered on device, the partition key is evaluated with
+    the candidate's compiled key projection (jnp — stays on device), and the
+    cached plan scatters straight into the new padded layout.  Only the
+    pids/histogram cross to the host (the histogram sizes the capacity).
+    64-bit columns ride the hybrid path as usual.
+    """
+    flat = flatten_dataset(ds)
+    keys = partitioner.key_fn()(flat)
+    pids, counts = shuffle_pids(keys, num_partitions, interpret=interpret,
+                                use_kernel=use_kernel, mode=mode)
+    columns = device_scatter_padded(flat, pids, counts, interpret=interpret,
+                                    use_kernel=use_kernel, mode=mode)
+    return columns, counts

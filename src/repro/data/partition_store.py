@@ -10,11 +10,12 @@ mesh via ``NamedSharding(mesh, P("data"))`` — see core/sharding_bridge.
 TPU adaptation (DESIGN §2): objects → fixed-capacity padded rows; skew shows
 up as padding waste, penalized by the ``key_distribution`` feature.
 
-Backends (DESIGN §5): ``backend="host"`` (default) dispatches with numpy;
-``backend="device"`` holds columns device-resident (jnp) behind the same
-``(m, capacity)`` layout, hashing keys through the fused Pallas
-``hash_partition`` kernel and scattering rows with a jax-backed re-bucket
-that consumes the kernel's ``(pids, histogram)`` output.
+Backends (DESIGN §5): ``backend="host"`` (default) dispatches with numpy
+(one vectorized counting-sort placement per write, no per-worker Python
+loop); ``backend="device"`` holds columns device-resident (jnp) behind the
+same ``(m, capacity)`` layout, dispatching through the cached single-pass
+shuffle plans (hash → counting-sort → packed scatter) and repartitioning
+device-to-device when the source dataset is device-backed.
 """
 
 from __future__ import annotations
@@ -27,12 +28,29 @@ import numpy as np
 
 from ..core.partitioner import (HASH, PartitionerCandidate, RANDOM,
                                 ROUND_ROBIN)
-from .device_repartition import device_partition_ids, device_scatter_padded
+from .device_repartition import (device_repartition_dataset,
+                                 device_scatter_padded,
+                                 host_counting_sort_dest, shuffle_pids)
 
 
 Columns = Dict[str, np.ndarray]
 
 BACKENDS = ("host", "device")
+
+# one vectorized counting-sort placement shared by all columns, replacing
+# the per-worker Python copy loop (lives in device_repartition so the
+# hostperm shuffle plans share the exact same placement)
+_counting_sort_dest = host_counting_sort_dest
+
+
+def _presorted_dest(counts: np.ndarray, cap: int) -> np.ndarray:
+    """Same placement for rows already segmented per worker (write_layout):
+    no sort needed, the worker id is implied by the segmentation."""
+    m = counts.shape[0]
+    pids = np.repeat(np.arange(m, dtype=np.int64), counts)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    rank = np.arange(pids.shape[0], dtype=np.int64) - offsets[pids]
+    return pids * cap + rank
 
 
 @dataclass
@@ -131,23 +149,18 @@ class PartitionStore:
         return np.asarray(pids, np.int64)
 
     def _dispatch_host(self, data, partitioner, n, seed):
-        """Host-side numpy dispatch: argsort by pid + per-worker copy."""
+        """Host-side numpy dispatch: one counting-sort placement, then a
+        single vectorized scatter per column (no per-worker Python loop)."""
         pids = self._host_pids(data, partitioner, n, seed)
-        order = np.argsort(pids, kind="stable")
-        sorted_pids = pids[order]
-        counts = np.bincount(sorted_pids, minlength=self.m)
+        counts = np.bincount(pids, minlength=self.m)
         cap = int(counts.max()) if n else 1
-        offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        dest = _counting_sort_dest(pids, counts, cap)
         columns: Columns = {}
         for k, v in data.items():
             v = np.asarray(v)
-            buf = np.zeros((self.m, cap) + v.shape[1:], v.dtype)
-            sv = v[order]
-            for w in range(self.m):
-                c = counts[w]
-                if c:
-                    buf[w, :c] = sv[offsets[w]:offsets[w] + c]
-            columns[k] = buf
+            buf = np.zeros((self.m * cap,) + v.shape[1:], v.dtype)
+            buf[dest] = v
+            columns[k] = buf.reshape((self.m, cap) + v.shape[1:])
         return columns, counts
 
     def _dispatch_device(self, data, partitioner, n, seed):
@@ -157,23 +170,28 @@ class PartitionStore:
         scatter on device, so the stored columns are device-resident."""
         if partitioner.strategy == HASH and partitioner.graph is not None:
             keys = partitioner.key_fn()(data)
-            pids, hist = device_partition_ids(keys, self.m,
-                                              interpret=self.interpret)
-            counts = np.asarray(hist).astype(np.int64)
+            pids, counts = shuffle_pids(keys, self.m,
+                                        interpret=self.interpret)
         else:
             pids = self._host_pids(data, partitioner, n, seed)
             counts = np.bincount(pids, minlength=self.m).astype(np.int64)
-        columns = device_scatter_padded(data, pids, counts)
+        columns = device_scatter_padded(data, pids, counts,
+                                        interpret=self.interpret)
         return columns, counts
 
     def write_layout(self, name: str, flat_columns: Columns,
                      counts: np.ndarray,
-                     partitioner: Optional[PartitionerCandidate]
+                     partitioner: Optional[PartitionerCandidate],
+                     device_columns: Optional[Columns] = None
                      ) -> StoredDataset:
         """Persist an ALREADY-partitioned table (flat columns segmented per
         worker by ``counts``) without re-dispatching — used when a workload
         materializes an output whose layout was produced by its own
-        partition nodes (e.g. iterative PageRank writing updated ranks)."""
+        partition nodes (e.g. iterative PageRank writing updated ranks).
+
+        ``device_columns`` — device-resident flats from an upstream device
+        shuffle (engine d2d chain); the device scatter consumes them in
+        place of re-uploading the matching host columns."""
         counts = np.asarray(counts, np.int64)
         n = int(counts.sum())
         cap = int(counts.max()) if n else 1
@@ -181,18 +199,17 @@ class PartitionStore:
             # rows are already segmented per worker ⇒ pids are implied
             pids = np.repeat(np.arange(self.m, dtype=np.int32), counts)
             columns = device_scatter_padded(flat_columns, pids, counts,
-                                            capacity=cap)
+                                            capacity=cap,
+                                            interpret=self.interpret,
+                                            device_columns=device_columns)
         else:
-            offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            dest = _presorted_dest(counts, cap)
             columns = {}
             for k, v in flat_columns.items():
                 v = np.asarray(v)
-                buf = np.zeros((self.m, cap) + v.shape[1:], v.dtype)
-                for w in range(self.m):
-                    c = counts[w]
-                    if c:
-                        buf[w, :c] = v[offsets[w]:offsets[w] + c]
-                columns[k] = buf
+                buf = np.zeros((self.m * cap,) + v.shape[1:], v.dtype)
+                buf[dest] = v
+                columns[k] = buf.reshape((self.m, cap) + v.shape[1:])
         nbytes = int(sum(np.asarray(v).nbytes for v in flat_columns.values()))
         ds = StoredDataset(name=name, columns=columns, counts=counts,
                            partitioner=partitioner, num_rows=n, nbytes=nbytes)
@@ -209,12 +226,45 @@ class PartitionStore:
     # -- shuffle (the operation Lachesis exists to avoid) ------------------------
     def repartition(self, ds: StoredDataset,
                     partitioner: PartitionerCandidate,
-                    name: Optional[str] = None) -> Tuple[StoredDataset, int]:
-        """Full shuffle: gather + re-bucket.  Returns (new ds, bytes moved).
+                    name: Optional[str] = None,
+                    mesh=None) -> Tuple[StoredDataset, int]:
+        """Full shuffle.  Returns (new ds, bytes moved).
 
         Bytes moved = (m-1)/m of the dataset on average (every row whose new
-        worker differs from its current one crosses the network)."""
-        flat = ds.gather()
+        worker differs from its current one crosses the network).
+
+        Device-to-device fast path (DESIGN §5): when both the store and the
+        dataset are device-backed and the target is a keyed hash
+        partitioner, the shuffle runs entirely on device — flatten by a
+        device gather, hash with the compiled key projection, counting-sort
+        scatter into the new layout — with no host ``gather()``/concatenate.
+        Pass ``mesh`` to commit the result back onto the mesh
+        (``sharding_bridge.device_put_dataset``) so repartitioned datasets
+        stay mesh-placed."""
+        t0 = time.perf_counter()
         moved = int(ds.nbytes * (self.m - 1) / self.m)
-        new = self.write(name or ds.name + "@reparted", flat, partitioner)
+        name = name or ds.name + "@reparted"
+        if (self.backend == "device" and ds.backend == "device"
+                and partitioner.strategy == HASH
+                and partitioner.graph is not None):
+            columns, counts = device_repartition_dataset(
+                ds, partitioner, self.m, interpret=self.interpret)
+            new = StoredDataset(name=name, columns=columns, counts=counts,
+                                partitioner=partitioner,
+                                num_rows=int(counts.sum()),
+                                nbytes=ds.nbytes)
+            self.datasets[name] = new
+            self.write_log.append({
+                "name": name, "rows": new.num_rows, "bytes": new.nbytes,
+                "strategy": partitioner.strategy,
+                "latency": time.perf_counter() - t0,
+                "skew": new.skew(), "path": "d2d",
+            })
+        else:
+            flat = ds.gather()
+            new = self.write(name, flat, partitioner)
+        if mesh is not None:
+            from ..core.sharding_bridge import device_put_dataset
+            new = device_put_dataset(mesh, new)
+            self.datasets[name] = new
         return new, moved

@@ -1,4 +1,4 @@
-"""Fused hash-partition Pallas TPU kernel — the paper's dispatch hot spot.
+"""Fused hash-partition Pallas TPU kernels — the paper's dispatch hot spot.
 
 Storage-time partitioning (Alg. 3 line 13-14) is a streaming pass over every
 object: hash the partition key, take ``% m``, and histogram the destinations
@@ -6,10 +6,24 @@ so the store can size per-partition buffers.  Fusing hash + mod + histogram
 into one VMEM-resident pass makes the producer-side overhead (paper Tab. 3:
 ≤10%) bandwidth-bound rather than kernel-launch-bound.
 
-Tiling: grid over key blocks; each step hashes a (block,) tile in VMEM,
-emits pids, and accumulates a private (m,) histogram in VMEM scratch that
-is flushed once at the end (grid dim is sequential on TPU, so the scratch
-carries across steps).
+Three kernels (DESIGN §5):
+
+* :func:`hash_partition` — hash + mod + histogram over exactly-sized keys
+  (``n`` static; padding tail masked out of the histogram).
+* :func:`hash_partition_padded` — the same pass over a shape-bucketed buffer
+  with a *dynamic* valid count delivered via scalar prefetch; padding rows
+  are assigned an overflow partition ``m`` so the counting sort places them
+  past the valid region.  This is what lets one jitted dispatch plan serve
+  every N in a shape bucket without retracing.
+* :func:`scatter_perm` — the counting-sort scatter stage: consume
+  ``(pids, counts)``, compute per-partition offsets with an in-kernel
+  exclusive prefix sum, and emit the destination permutation directly —
+  an O(N) *stable* placement replacing the O(N log N) ``argsort`` the
+  re-bucket used to pay.
+
+Tiling: grid over key blocks; each step processes a (block,) tile in VMEM
+and carries per-partition state ((m,) histogram / running offsets) in VMEM
+scratch across steps (the grid dim is sequential on TPU).
 """
 
 from __future__ import annotations
@@ -29,6 +43,17 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
 DEFAULT_BLOCK = 2048
 
 
+def _wang(x):
+    """Wang hash (matches ref.wang_hash / core.ir._mix_hash)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ jnp.uint32(61)) ^ (x >> 16)
+    x = x * jnp.uint32(9)
+    x = x ^ (x >> 4)
+    x = x * jnp.uint32(0x27D4EB2D)
+    x = x ^ (x >> 15)
+    return x
+
+
 def _kernel(keys_ref, pids_ref, counts_ref, hist_ref, *,
             num_partitions: int, block: int, n_valid: int):
     i = pl.program_id(0)
@@ -38,13 +63,7 @@ def _kernel(keys_ref, pids_ref, counts_ref, hist_ref, *,
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
-    x = keys_ref[...].astype(jnp.uint32)
-    # Wang hash (matches ref.wang_hash / core.ir._mix_hash)
-    x = (x ^ jnp.uint32(61)) ^ (x >> 16)
-    x = x * jnp.uint32(9)
-    x = x ^ (x >> 4)
-    x = x * jnp.uint32(0x27D4EB2D)
-    x = x ^ (x >> 15)
+    x = _wang(keys_ref[...])
     pid = (x % jnp.uint32(num_partitions)).astype(jnp.int32)
     pids_ref[...] = pid
 
@@ -88,3 +107,136 @@ def hash_partition(keys: jax.Array, num_partitions: int, *,
         interpret=interpret,
     )(keys)
     return pids[:n], counts
+
+
+# ---------------------------------------------------------------------------
+# Dynamic-n variant: shape-bucketed keys + scalar-prefetched valid count
+# ---------------------------------------------------------------------------
+
+def _kernel_padded(n_ref, keys_ref, pids_ref, counts_ref, hist_ref, *,
+                   num_partitions: int, block: int):
+    i = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    x = _wang(keys_ref[...])
+    pid_raw = (x % jnp.uint32(num_partitions)).astype(jnp.int32)
+    # padding rows → overflow partition m, so the counting sort that consumes
+    # these pids stably parks them *after* every valid row
+    pos = i * block + jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+    pid = jnp.where(pos < n_ref[0], pid_raw, num_partitions)
+    pids_ref[...] = pid
+
+    onehot = (pid[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block, num_partitions + 1), 1))
+    hist_ref[...] += onehot.astype(jnp.int32).sum(axis=0)
+
+    @pl.when(i == nb - 1)
+    def _flush():
+        counts_ref[...] = hist_ref[...]
+
+
+def hash_partition_padded(keys: jax.Array, n_valid: jax.Array,
+                          num_partitions: int, *,
+                          block: int = DEFAULT_BLOCK,
+                          interpret: bool = False
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """keys: (B,) integer, n_valid: () int32 dynamic →
+    (pids (B,) int32 with padding → m, counts (m+1,) int32).
+
+    B must already be a multiple-friendly bucket size (the caller pads); the
+    valid count arrives via scalar prefetch so one compiled plan serves every
+    N ≤ B without retracing.
+    """
+    B = keys.shape[0]
+    block = min(block, max(8, B))
+    assert B % block == 0, "block size must divide the bucketed key count"
+    nb = B // block
+    m1 = num_partitions + 1
+
+    kernel = functools.partial(_kernel_padded, num_partitions=num_partitions,
+                               block=block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i, n_ref: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i, n_ref: (i,)),
+                   pl.BlockSpec((m1,), lambda i, n_ref: (0,))],
+        scratch_shapes=[pltpu.VMEM((m1,), jnp.int32)],
+    )
+    pids, counts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B,), jnp.int32),
+                   jax.ShapeDtypeStruct((m1,), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(jnp.asarray(n_valid, jnp.int32).reshape(1), keys)
+    return pids, counts
+
+
+# ---------------------------------------------------------------------------
+# Counting-sort scatter: (pids, counts) → destination permutation, O(N)
+# ---------------------------------------------------------------------------
+
+def _perm_kernel(pids_ref, counts_ref, dest_ref, offs_ref, *,
+                 num_partitions: int, block: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        # in-kernel exclusive prefix sum of the histogram → base offsets
+        c = counts_ref[...]
+        offs_ref[...] = jnp.cumsum(c) - c
+
+    pid = pids_ref[...]                                    # (block,) int32
+    onehot = (pid[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block, num_partitions), 1))
+    oh = onehot.astype(jnp.int32)
+    # stable within-block rank of each row among same-pid rows
+    rank = ((jnp.cumsum(oh, axis=0) - oh) * oh).sum(axis=1)
+    base = (offs_ref[...][None, :] * oh).sum(axis=1)
+    dest_ref[...] = base + rank
+    # carry: partitions already filled by this block
+    offs_ref[...] += oh.sum(axis=0)
+
+
+def scatter_perm(pids: jax.Array, counts: jax.Array, *,
+                 block: int = DEFAULT_BLOCK,
+                 interpret: bool = False) -> jax.Array:
+    """(pids (N,) int32, counts (m,) int32) → dest (N,) int32.
+
+    ``dest[i]`` = position of row i in the stable sort of ``pids`` — the
+    counting-sort placement (base offset from the in-kernel prefix sum +
+    running per-partition fill + within-block stable rank).  O(N·m/VPU)
+    with no sort; sentinel pids outside [0, m) get garbage dests without
+    perturbing any real row's slot (their one-hot row is all-False).
+    """
+    n = pids.shape[0]
+    if n == 0:
+        return jnp.zeros(0, jnp.int32)
+    m = counts.shape[0]
+    block = min(block, max(8, n))
+    pad = (-n) % block
+    if pad:                       # sentinel never matches a real partition
+        pids = jnp.pad(pids, (0, pad), constant_values=-1)
+    nb = pids.shape[0] // block
+
+    kernel = functools.partial(_perm_kernel, num_partitions=m, block=block)
+    dest = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((m,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pids.shape[0],), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((m,), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(pids.astype(jnp.int32), counts.astype(jnp.int32))
+    return dest[:n]

@@ -1,5 +1,11 @@
-"""Jitted wrapper for the hash-partition kernel (falls back to the oracle
-off-TPU; the PartitionStore calls this at storage time)."""
+"""Jitted wrappers for the hash-partition kernel family.
+
+Each wrapper jits once per static config and dispatches to the Pallas
+kernel (``use_kernel=True`` — compiled on TPU, interpret elsewhere) or the
+pure-jnp oracle.  The oracle and kernel are bit-identical (tested), so the
+dispatch-plan layer in ``data/device_repartition.py`` picks whichever is
+actually fast on the active backend.
+"""
 
 from __future__ import annotations
 
@@ -8,8 +14,10 @@ from typing import Tuple
 
 import jax
 
-from .hash_partition import hash_partition
-from .ref import hash_partition_ref
+from .hash_partition import (hash_partition, hash_partition_padded,
+                             scatter_perm)
+from .ref import (hash_partition_padded_ref, hash_partition_ref,
+                  scatter_perm_ref)
 
 
 @partial(jax.jit, static_argnames=("num_partitions", "interpret",
@@ -19,3 +27,27 @@ def partition_ids(keys, num_partitions: int, *, interpret: bool = False,
     if not use_kernel:
         return hash_partition_ref(keys, num_partitions)
     return hash_partition(keys, num_partitions, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("num_partitions", "interpret",
+                                   "use_kernel"))
+def padded_partition_ids(keys, n_valid, num_partitions: int, *,
+                         interpret: bool = False, use_kernel: bool = True
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Shape-bucketed dispatch: keys (B,) + dynamic valid count →
+    (pids (B,) with padding → m, counts (m+1,))."""
+    if not use_kernel:
+        return hash_partition_padded_ref(keys, n_valid, num_partitions)
+    return hash_partition_padded(keys, n_valid, num_partitions,
+                                 interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def scatter_permutation(pids, counts, *, interpret: bool = False,
+                        use_kernel: bool = True) -> jax.Array:
+    """Counting-sort destination permutation: (pids, matching histogram) →
+    dest (N,) int32, the stable O(N) replacement for
+    ``argsort(pids, stable=True)`` + inversion."""
+    if not use_kernel:
+        return scatter_perm_ref(pids, counts)
+    return scatter_perm(pids, counts, interpret=interpret)

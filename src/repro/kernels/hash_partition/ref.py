@@ -28,3 +28,36 @@ def hash_partition_ref(keys: jax.Array,
     pids = (wang_hash(keys) % jnp.uint32(num_partitions)).astype(jnp.int32)
     counts = jnp.bincount(pids, length=num_partitions).astype(jnp.int32)
     return pids, counts
+
+
+def hash_partition_padded_ref(keys: jax.Array, n_valid: jax.Array,
+                              num_partitions: int
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic-``n`` oracle for shape-bucketed dispatch plans.
+
+    ``keys`` is padded to a bucket size B ≥ n_valid; padding rows land in an
+    overflow partition ``m`` so downstream counting sort places them past the
+    valid region.  Returns (pids (B,) int32 with padding → m,
+    counts (m+1,) int32 where counts[m] = B - n_valid).
+    """
+    B = keys.shape[0]
+    pid = (wang_hash(keys) % jnp.uint32(num_partitions)).astype(jnp.int32)
+    valid = jnp.arange(B, dtype=jnp.int32) < n_valid
+    pids = jnp.where(valid, pid, num_partitions)
+    counts = jnp.zeros(num_partitions + 1, jnp.int32).at[pids].add(1)
+    return pids, counts
+
+
+def scatter_perm_ref(pids: jax.Array,
+                     counts: jax.Array = None) -> jax.Array:
+    """Oracle for the counting-sort scatter: destination permutation.
+
+    ``dest[i]`` is row i's position in the *stable* sort of ``pids`` — i.e.
+    the inverse of ``argsort(pids, stable=True)``, which is exactly what the
+    O(N) counting-sort kernel emits (``counts`` is ignored here; the kernel
+    needs it to seed its offsets, the oracle recovers it from the sort).
+    """
+    n = pids.shape[0]
+    order = jnp.argsort(pids, stable=True)
+    return jnp.zeros(n, jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
