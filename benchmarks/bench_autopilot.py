@@ -1,0 +1,89 @@
+"""Autopilot service benchmark (DESIGN §8) — background repartition rows.
+
+Times the observe → decide → repartition loop end to end on the drift
+scenario: consumer wall before the service acts, the background
+repartition itself (tick decision + apply + generation swap, d2d on the
+device backend), the post-decision consumer (shuffles elided) and the
+post-drift re-repartition.  Also prices the observer: engine wall with
+auto-recording on vs off.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import Engine
+from repro.core.history import HistoryStore
+from repro.data.partition_store import PartitionStore
+
+from .common import emit, scale
+
+
+def drift_rows(backend: str) -> None:
+    from repro.service import run_drift_scenario
+    rep = run_drift_scenario(backend=backend,
+                             n_lineitem=scale(200_000, 12_000),
+                             n_orders=scale(20_000, 1_500),
+                             n_parts=scale(2_000, 300))
+    pre = rep.phase_a[-1]
+    emit(f"autopilot_consumer_pre_{backend}", pre.wall_s * 1e6,
+         f"round-robin layout shuffles={pre.shuffles} elided={pre.elided}")
+    applied = {a.dataset: a for a in rep.tick_a.applied}
+    li = applied["lineitem"]
+    emit(f"autopilot_bg_repartition_{backend}",
+         li.repartition_wall_s * 1e6,
+         f"lineitem -> {li.decision.candidate.signature()} path={li.path} "
+         f"gen={li.generation} moved={li.moved_bytes} "
+         f"benefit={li.score.benefit_s * 1e3:.1f}ms/window "
+         f"cost={li.score.repartition_s * 1e3:.1f}ms "
+         f"decided_in={li.decision.elapsed_s * 1e3:.1f}ms")
+    emit(f"autopilot_consumer_post_{backend}", rep.post_a.wall_s * 1e6,
+         f"speedup={pre.wall_s / max(rep.post_a.wall_s, 1e-12):.2f}x "
+         f"shuffles={rep.post_a.shuffles} elided={rep.post_a.elided}")
+    applied_b = {a.dataset: a for a in rep.tick_b.applied}
+    lib = applied_b["lineitem"]
+    emit(f"autopilot_drift_repartition_{backend}",
+         lib.repartition_wall_s * 1e6,
+         f"lineitem -> {lib.decision.candidate.signature()} path={lib.path} "
+         f"gen={lib.generation} (orderkey mix aged out of window)")
+    emit(f"autopilot_consumer_postdrift_{backend}", rep.post_b.wall_s * 1e6,
+         f"shuffles={rep.post_b.shuffles} elided={rep.post_b.elided}")
+
+
+def observer_overhead() -> None:
+    """Auto-recording cost: engine wall with history on vs off."""
+    from repro.service import drift_tables, q_orderkey
+    tables = drift_tables(n_lineitem=scale(200_000, 12_000),
+                          n_orders=scale(20_000, 1_500))
+    store = PartitionStore(num_workers=8)
+    for name in ("lineitem", "orders"):
+        store.write(name, tables[name])
+    eng = Engine(store)
+    wl = q_orderkey()
+    reps = 5
+
+    def best_wall(history):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            eng.run(wl, history=history,
+                    timestamp=0.0 if history else None)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    base = best_wall(None)
+    eng.run(wl)          # warm
+    observed = best_wall(HistoryStore())
+    emit("autopilot_observer_overhead", (observed - base) * 1e6,
+         f"auto ExecutionRecord per run: {observed / base - 1:+.1%} of "
+         f"{base * 1e3:.1f}ms consumer wall")
+
+
+def main() -> None:
+    for backend in ("host", "device"):
+        drift_rows(backend)
+    observer_overhead()
+
+
+if __name__ == "__main__":
+    main()

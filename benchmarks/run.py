@@ -19,7 +19,7 @@ import traceback
 def main() -> None:
     from . import (bench_reddit, bench_pagerank, bench_linear_algebra,
                    bench_tpch, bench_overhead, bench_drl_training,
-                   bench_history, bench_kernels)
+                   bench_history, bench_kernels, bench_autopilot)
     argv = sys.argv[1:]
     json_path = None
     if "--json" in argv:
@@ -36,6 +36,7 @@ def main() -> None:
         ("drl_training(Fig12)", bench_drl_training.main),
         ("history(Fig13)", bench_history.main),
         ("kernels(Pallas)", bench_kernels.main),
+        ("autopilot(service)", bench_autopilot.main),
     ]
     from .common import ROWS
     print("name,us_per_call,derived")

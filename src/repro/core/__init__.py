@@ -17,6 +17,6 @@ from .partitioner import (PartitionerCandidate, enumerate_candidates,
 from .matching import partitioning_match, plan_shuffles, MatchResult
 from .history import HistoryStore, ExecutionRecord, SkeletonNode
 from .features import candidate_features, build_state, state_dim
-from .advisor import (partitioning_creation, PartitioningDecision,
-                      GreedySelector, DRLSelector)
+from .advisor import (partitioning_creation, apply_decision,
+                      PartitioningDecision, GreedySelector, DRLSelector)
 from .engine import Engine, EngineStats, TableVal

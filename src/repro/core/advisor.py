@@ -56,8 +56,11 @@ class GreedySelector:
                 runs = g.runs
                 if not runs:
                     continue
-                mean_lat = float(np.mean([r.latency for r in runs]))
-                freq = float(len(runs))
+                # weight-aware (compacted records stand for `weight` runs)
+                wsum = float(sum(r.weight for r in runs))
+                mean_lat = float(sum(r.weight * r.latency
+                                     for r in runs)) / wsum
+                freq = wsum
                 saved = 0.0
                 if cand.is_keyed and any(
                         cand.signature() in r.candidate_stats for r in runs):
@@ -125,3 +128,15 @@ def partitioning_creation(producer, dataset: str, history: HistoryStore,
         dataset=dataset, candidate=feats[action].candidate, features=feats,
         consumers=[g.ir_signature for g in groups], action_index=action,
         state=state, elapsed_s=time.perf_counter() - t0)
+
+
+def apply_decision(store, decision: PartitioningDecision, *, mesh=None,
+                   swap: bool = True):
+    """Apply a :class:`PartitioningDecision` to a live store: repartition
+    the dataset into the decided layout (device-to-device when both store
+    and dataset are device-backed) and — with ``swap=True`` — atomically
+    flip the dataset to the new generation so readers never observe a
+    half-shuffled table (DESIGN §8).  Returns ``(new_dataset, bytes_moved)``.
+    """
+    ds = store.read(decision.dataset)
+    return store.repartition(ds, decision.candidate, mesh=mesh, swap=swap)

@@ -83,6 +83,13 @@ class EngineStats:
     match_overhead_s: float = 0.0
     stage_latency: Dict[str, float] = field(default_factory=dict)
     wall_s: float = 0.0
+    shuffle_s: float = 0.0           # wall time spent inside real shuffles
+    input_bytes: int = 0             # bytes scanned from the store
+    output_bytes: int = 0            # bytes written back to the store
+    # per-candidate runtime stats for this run (ExecutionRecord schema),
+    # keyed by candidate signature; None unless the run is being observed
+    # (history / run hooks attached) — the np.unique pass isn't free.
+    candidate_stats: Optional[Dict[str, Dict[str, float]]] = None
 
     def modeled_network_s(self, bandwidth: float = 1.25e9) -> float:
         return self.shuffle_bytes / bandwidth
@@ -93,7 +100,8 @@ class Engine:
                  enable_lachesis_matching: bool = True,
                  net_bandwidth: float = 1.25e9,
                  backend: str = "host",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 history=None):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}")
         self.store = store
@@ -101,15 +109,38 @@ class Engine:
         self.net_bandwidth = net_bandwidth
         self.backend = backend
         self.interpret = interpret   # None → auto (interpret mode off-TPU)
+        # observation hooks (DESIGN §8): `history` auto-logs an
+        # ExecutionRecord per run; run_hooks fire with (workload, stats)
+        # after every run (the service's Observer attaches here).
+        self.history = history
+        self.run_hooks: List[Callable[[Any, EngineStats], None]] = []
+
+    def add_run_hook(self, fn: Callable[[Any, EngineStats], None]) -> None:
+        """Register ``fn(workload, stats)`` to fire after every run."""
+        self.run_hooks.append(fn)
 
     # ------------------------------------------------------------------ run --
-    def run(self, workload,
-            backend: Optional[str] = None) -> Tuple[Dict[int, Any], EngineStats]:
+    def run(self, workload, backend: Optional[str] = None,
+            history=None,
+            timestamp: Optional[float] = None
+            ) -> Tuple[Dict[int, Any], EngineStats]:
+        """Execute ``workload``; returns ``(node values, stats)``.
+
+        With ``history`` (or a constructor-level ``history``) attached, an
+        :class:`~repro.core.history.ExecutionRecord` is appended
+        automatically — app id, IR signature, latency, input/output bytes
+        and per-candidate selectivity/distinct-key stats measured at each
+        partition node — closing the paper's observe loop without
+        hand-built records.  ``timestamp`` overrides the record's wall
+        clock (deterministic tests / logical clocks)."""
         backend = self.backend if backend is None else backend
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}")
+        history = self.history if history is None else history
         g: IRGraph = workload.graph
         stats = EngineStats()
+        if history is not None or self.run_hooks:
+            stats.candidate_stats = {}
         t_start = time.perf_counter()
         vals: Dict[int, Any] = {}
         # Pre-compute candidate subgraphs per partition node (for key
@@ -129,6 +160,7 @@ class Engine:
                 ds = self.store.read(node.params["dataset"])
                 flat = ds.gather()
                 dev = device_flat_columns(ds) if backend == "device" else None
+                stats.input_bytes += ds.nbytes
                 vals[nid] = TableVal(flat, ds.counts.copy(), ds.partitioner,
                                      device_columns=dev)
             elif kind == "partition":
@@ -152,6 +184,7 @@ class Engine:
                 self.store.write_layout(node.params["dataset"], cols,
                                         tv.counts, tv.partitioner,
                                         device_columns=tv.device_columns)
+                stats.output_bytes += int(sum(v.nbytes for v in cols.values()))
                 vals[nid] = tv
             else:
                 # lambda nodes: evaluate over parent values (columns/TableVal)
@@ -164,6 +197,16 @@ class Engine:
                 (time.perf_counter() - t0)
 
         stats.wall_s = time.perf_counter() - t_start
+        if history is not None:
+            history.log_workload(
+                workload,
+                timestamp=time.time() if timestamp is None else timestamp,
+                latency=stats.wall_s,
+                input_bytes=float(stats.input_bytes),
+                output_bytes=float(stats.output_bytes),
+                candidate_stats=stats.candidate_stats or {})
+        for hook in self.run_hooks:
+            hook(workload, stats)
         return vals, stats
 
     # ------------------------------------------------------- partition node --
@@ -180,6 +223,12 @@ class Engine:
         table: TableVal = _first_table(vals, g, nid)
         key_parent = g.parents(nid)[0]
         key_vals = np.asarray(vals[key_parent]).reshape(-1)
+
+        # observation (DESIGN §8): per-candidate runtime stats measured at
+        # this node feed the auto-logged ExecutionRecord
+        if stats.candidate_stats is not None and cand is not None:
+            _record_candidate_stats(stats.candidate_stats,
+                                    cand.signature(), table, key_vals)
 
         # Alg. 4 elision check against the table's current layout
         if (cand is not None and self.matching
@@ -199,6 +248,7 @@ class Engine:
         # shuffle: hash the key column, re-bucket every column
         from .ir import _mix_hash
         strategy = g.nodes[nid].params.get("strategy", "hash")
+        t_sh = time.perf_counter()
         if backend == "device" and strategy == "hash" and key_vals.size:
             # DESIGN §5: one jitted plan — fused hash + histogram +
             # counting-sort permutation + packed gather; upstream device
@@ -210,6 +260,7 @@ class Engine:
             stats.device_repartitions += 1
             stats.shuffle_bytes += int(table.nbytes() * (table.m - 1)
                                        / table.m)
+            stats.shuffle_s += time.perf_counter() - t_sh
             return TableVal(res.columns, res.counts,
                             cand or table.partitioner,
                             device_columns=res.device_columns)
@@ -226,6 +277,7 @@ class Engine:
         new_cols["__key__"] = key_vals[order]
         stats.shuffles_performed += 1
         stats.shuffle_bytes += int(table.nbytes() * (table.m - 1) / table.m)
+        stats.shuffle_s += time.perf_counter() - t_sh
         return TableVal(new_cols, counts, cand or table.partitioner)
 
     # ------------------------------------------------------------- join node --
@@ -325,6 +377,29 @@ class Engine:
                            for w in range(table.m)], np.int64)
         cols = {k: v[pred] for k, v in table.columns.items()}
         return TableVal(cols, counts, table.partitioner)
+
+
+def _record_candidate_stats(out: Dict[str, Dict[str, float]], sig: str,
+                            table: TableVal, key_vals: np.ndarray) -> None:
+    """Measure the ExecutionRecord candidate-stat schema at a partition
+    node.  Two partition nodes in one run can share a (structural)
+    signature; merging mirrors features.py aggregation — max selectivity,
+    min distinct keys — so per-run stats compose like per-group ones."""
+    object_bytes = float(table.nbytes())
+    key_bytes = float(key_vals.nbytes)
+    st = {
+        "selectivity": key_bytes / object_bytes if object_bytes else 0.0,
+        "distinct_keys": float(np.unique(key_vals).size),
+        "num_objects": float(table.num_rows),
+        "key_bytes": key_bytes,
+        "object_bytes": object_bytes,
+    }
+    cur = out.get(sig)
+    if cur is None:
+        out[sig] = st
+        return
+    for k, v in st.items():
+        cur[k] = min(cur[k], v) if k == "distinct_keys" else max(cur[k], v)
 
 
 def _first_table(vals, g, nid):

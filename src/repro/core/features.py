@@ -50,7 +50,8 @@ def candidate_features(cand: PartitionerCandidate,
     sig = cand.signature()
 
     if runs:
-        freq = float(len(runs))
+        # compaction-aware: an aggregate record stands for `weight` runs
+        freq = float(sum(r.weight for r in runs))
         recency = runs[-1].timestamp
         recent = [r.timestamp for r in runs[-recent_k:]]
         distance = (float(np.mean(np.diff(recent))) if len(recent) > 1 else 0.0)

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 from dataclasses import dataclass, field, asdict
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -20,7 +21,12 @@ from .ir import IRGraph
 
 @dataclass
 class ExecutionRecord:
-    """One execution of a workload (one node of the low-level graph)."""
+    """One execution of a workload (one node of the low-level graph).
+
+    ``weight`` is the number of real executions this record stands for: 1
+    for a live run, >1 for an aggregate produced by :meth:`HistoryStore.
+    compact` (latency/bytes then hold the weighted means of the merged
+    runs, ``timestamp`` their most recent)."""
     app_id: str
     timestamp: float
     ir_signature: str
@@ -33,6 +39,7 @@ class ExecutionRecord:
     # signature: {"selectivity": float, "distinct_keys": float,
     #             "key_bytes": float, "object_bytes": float}
     candidate_stats: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    weight: float = 1.0
 
 
 @dataclass
@@ -58,6 +65,7 @@ class HistoryStore:
         self.records: List[ExecutionRecord] = []
         self.irs: Dict[str, IRGraph] = {}          # ir_signature -> IR graph
         self.path = path
+        self._lock = threading.Lock()   # appends vs compaction (service)
         if path and os.path.exists(path):
             with open(path) as f:
                 for line in f:
@@ -65,12 +73,13 @@ class HistoryStore:
 
     # -- logging ----------------------------------------------------------------
     def log(self, record: ExecutionRecord, ir: Optional[IRGraph] = None) -> None:
-        self.records.append(record)
-        if ir is not None:
-            self.irs[record.ir_signature] = ir
-        if self.path:
-            with open(self.path, "a") as f:
-                f.write(json.dumps(asdict(record)) + "\n")
+        with self._lock:
+            self.records.append(record)
+            if ir is not None:
+                self.irs[record.ir_signature] = ir
+            if self.path:
+                with open(self.path, "a") as f:
+                    f.write(json.dumps(asdict(record)) + "\n")
 
     def log_workload(self, workload, *, timestamp: float, latency: float = 0.0,
                      input_bytes: float = 0.0, output_bytes: float = 0.0,
@@ -137,12 +146,96 @@ class HistoryStore:
     def ir_of(self, signature: str) -> Optional[IRGraph]:
         return self.irs.get(signature)
 
+    # -- compaction (bounds the append-only log) --------------------------------
+    def compact(self, max_records: int) -> int:
+        """Bound the log: keep the newest ``max_records`` records verbatim
+        and merge everything older into one aggregate record per skeleton
+        group (IR signature), preserving weighted means, total weight and
+        the most recent timestamp.  Returns the number of records removed.
+
+        Post-compaction size is ``max_records + (#distinct old skeletons)``
+        — bounded by the (small, stable) skeleton count, so a service
+        appending every run can compact periodically and the log never
+        grows without limit.  When the store is file-backed the JSONL is
+        atomically rewritten (tmp + rename)."""
+        with self._lock:
+            if max_records < 0:
+                raise ValueError("max_records must be >= 0")
+            if len(self.records) <= max_records:
+                return 0
+            cut = len(self.records) - max_records
+            old, keep = self.records[:cut], self.records[cut:]
+            merged: Dict[str, ExecutionRecord] = {}
+            order: List[str] = []
+            for r in old:
+                agg = merged.get(r.ir_signature)
+                if agg is None:
+                    merged[r.ir_signature] = _copy_record(r)
+                    order.append(r.ir_signature)
+                else:
+                    _merge_record(agg, r)
+            self.records = [merged[s] for s in order] + keep
+            removed = cut - len(merged)
+            if self.path:
+                tmp = self.path + ".tmp"
+                with open(tmp, "w") as f:
+                    for r in self.records:
+                        f.write(json.dumps(asdict(r)) + "\n")
+                os.replace(tmp, self.path)
+            return removed
+
     # -- simple aggregates used by features.py ----------------------------------------------
     def runs_of_group(self, signature: str) -> List[ExecutionRecord]:
         return [r for r in self.records if r.ir_signature == signature]
 
+    def total_runs(self) -> float:
+        """Number of executions represented (compaction-aware)."""
+        return float(sum(r.weight for r in self.records))
+
     def overall_throughput(self) -> float:
         """Baseline throughput (bytes/s) over all history — reward denominator."""
-        total_bytes = sum(r.input_bytes for r in self.records)
-        total_lat = sum(r.latency for r in self.records)
+        total_bytes = sum(r.weight * r.input_bytes for r in self.records)
+        total_lat = sum(r.weight * r.latency for r in self.records)
         return total_bytes / total_lat if total_lat > 0 else 0.0
+
+
+def _copy_record(r: ExecutionRecord) -> ExecutionRecord:
+    return ExecutionRecord(
+        app_id=r.app_id, timestamp=r.timestamp, ir_signature=r.ir_signature,
+        inputs=list(r.inputs), outputs=list(r.outputs), latency=r.latency,
+        input_bytes=r.input_bytes, output_bytes=r.output_bytes,
+        candidate_stats={k: dict(v) for k, v in r.candidate_stats.items()},
+        weight=r.weight)
+
+
+def _merge_record(agg: ExecutionRecord, r: ExecutionRecord) -> None:
+    """Fold ``r`` into the aggregate ``agg`` (same IR signature).
+
+    Scalars become weighted means; per-candidate stats follow the feature
+    aggregation semantics of features.py (max selectivity, min distinct
+    keys) so max/min over the compacted log equal max/min over the raw
+    runs it replaced."""
+    w = agg.weight + r.weight
+    agg.latency = (agg.weight * agg.latency + r.weight * r.latency) / w
+    agg.input_bytes = (agg.weight * agg.input_bytes
+                       + r.weight * r.input_bytes) / w
+    agg.output_bytes = (agg.weight * agg.output_bytes
+                        + r.weight * r.output_bytes) / w
+    agg.timestamp = max(agg.timestamp, r.timestamp)
+    for d in r.inputs:
+        if d not in agg.inputs:
+            agg.inputs.append(d)
+    for d in r.outputs:
+        if d not in agg.outputs:
+            agg.outputs.append(d)
+    for sig, st in r.candidate_stats.items():
+        cur = agg.candidate_stats.setdefault(sig, dict(st))
+        if cur is not st:
+            for k, v in st.items():
+                if k == "distinct_keys" and k in cur:
+                    cur[k] = min(cur[k], v)
+                elif k in cur:
+                    cur[k] = max(cur[k], v)
+                else:
+                    cur[k] = v
+    agg.weight = w

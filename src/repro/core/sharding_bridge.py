@@ -91,4 +91,5 @@ def device_put_dataset(mesh: Mesh, ds,
             cols[k] = v_np
     return StoredDataset(name=ds.name, columns=cols, counts=ds.counts,
                          partitioner=ds.partitioner, num_rows=ds.num_rows,
-                         nbytes=ds.nbytes, created_at=ds.created_at)
+                         nbytes=ds.nbytes, created_at=ds.created_at,
+                         generation=ds.generation)

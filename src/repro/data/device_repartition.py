@@ -54,6 +54,7 @@ gather), preserving exact bits and dtypes either way.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -321,19 +322,65 @@ class ShufflePlan:
     calls: int = 0
 
 
-_PLANS: Dict[Tuple, ShufflePlan] = {}
+# LRU-bounded plan cache.  A long-lived optimizer service shuffles many
+# (shape-bucket, dtype-set, m, capacity) keys over its lifetime; an unbounded
+# dict would pin every jitted executable it ever traced.  Least-recently-used
+# plans are evicted past the capacity; their trace/call counters fold into
+# ``_RETIRED`` so ``plan_cache_stats()`` totals stay monotone across
+# evictions (the no-retrace assertions keep working).
+_PLANS: "OrderedDict[Tuple, ShufflePlan]" = OrderedDict()
+_PLAN_CACHE_CAPACITY = 64
+_RETIRED = {"plans": 0, "traces": 0, "calls": 0}
 
 
 def plan_cache_stats() -> Dict[str, int]:
-    """(plans, traces, calls) across the process — flat ``traces`` across
-    repeated same-shape shuffles is the no-retrace guarantee."""
+    """(plans, traces, calls, evictions) across the process — ``plans`` is
+    the live-plan count; ``traces``/``calls`` include evicted plans so a flat
+    ``traces`` across repeated same-shape shuffles stays the no-retrace
+    guarantee even after LRU turnover."""
     return {"plans": len(_PLANS),
-            "traces": sum(p.traces for p in _PLANS.values()),
-            "calls": sum(p.calls for p in _PLANS.values())}
+            "traces": sum(p.traces for p in _PLANS.values())
+            + _RETIRED["traces"],
+            "calls": sum(p.calls for p in _PLANS.values())
+            + _RETIRED["calls"],
+            "evictions": _RETIRED["plans"]}
+
+
+def reset_plan_cache_stats() -> None:
+    """Zero the trace/call counters without dropping any compiled plan —
+    the companion to :func:`plan_cache_stats` for a long-lived service that
+    wants per-window "did anything retrace?" checks."""
+    for p in _PLANS.values():
+        p.traces = 0
+        p.calls = 0
+    _RETIRED.update(plans=0, traces=0, calls=0)
 
 
 def clear_plan_cache() -> None:
+    """Drop every plan and all counters (tests start from a clean slate)."""
     _PLANS.clear()
+    _RETIRED.update(plans=0, traces=0, calls=0)
+
+
+def set_plan_cache_capacity(capacity: int) -> None:
+    """Bound the live-plan count; evicts LRU plans immediately if needed."""
+    global _PLAN_CACHE_CAPACITY
+    if capacity < 1:
+        raise ValueError("plan cache capacity must be >= 1")
+    _PLAN_CACHE_CAPACITY = capacity
+    _evict_to_capacity()
+
+
+def plan_cache_capacity() -> int:
+    return _PLAN_CACHE_CAPACITY
+
+
+def _evict_to_capacity() -> None:
+    while len(_PLANS) > _PLAN_CACHE_CAPACITY:
+        _key, plan = _PLANS.popitem(last=False)
+        _RETIRED["plans"] += 1
+        _RETIRED["traces"] += plan.traces
+        _RETIRED["calls"] += plan.calls
 
 
 def _get_plan(key: Tuple, build: Callable[[ShufflePlan], Callable]
@@ -343,6 +390,9 @@ def _get_plan(key: Tuple, build: Callable[[ShufflePlan], Callable]
         plan = ShufflePlan(key=key)
         plan.fn = jax.jit(build(plan))
         _PLANS[key] = plan
+        _evict_to_capacity()
+    else:
+        _PLANS.move_to_end(key)
     return plan
 
 

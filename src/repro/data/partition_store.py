@@ -20,6 +20,7 @@ device-to-device when the source dataset is device-backed.
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -55,6 +56,13 @@ def _presorted_dest(counts: np.ndarray, cap: int) -> np.ndarray:
 
 @dataclass
 class StoredDataset:
+    """One immutable generation of a named dataset.
+
+    Column arrays are never mutated in place after construction; a layout
+    change installs a NEW StoredDataset and atomically flips the store's
+    name → generation pointer (DESIGN §8).  A reader holding this object
+    therefore always sees one consistent generation, never a half-shuffled
+    table, even while a background repartition swaps the pointer."""
     name: str
     columns: Columns                   # each (m, capacity, ...)
     counts: np.ndarray                 # (m,) valid rows per worker
@@ -62,6 +70,7 @@ class StoredDataset:
     num_rows: int
     nbytes: int
     created_at: float = field(default_factory=time.time)
+    generation: int = 0
 
     @property
     def num_workers(self) -> int:
@@ -98,12 +107,14 @@ class StoredDataset:
         return StoredDataset(name=self.name, columns=cols,
                              counts=self.counts, partitioner=self.partitioner,
                              num_rows=self.num_rows, nbytes=self.nbytes,
-                             created_at=self.created_at)
+                             created_at=self.created_at,
+                             generation=self.generation)
 
 
 class PartitionStore:
     def __init__(self, num_workers: int = 8, backend: str = "host",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 max_retired_generations: int = 2):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}")
         self.m = num_workers
@@ -111,6 +122,33 @@ class PartitionStore:
         self.interpret = interpret      # None → auto (interpret off-TPU)
         self.datasets: Dict[str, StoredDataset] = {}
         self.write_log: List[Dict[str, Any]] = []
+        # generation machinery (DESIGN §8): `datasets` maps each name to its
+        # CURRENT generation; superseded generations are retained (bounded)
+        # so in-flight readers and audits can still resolve them by number.
+        self.max_retired_generations = max_retired_generations
+        self._retired: Dict[str, List[StoredDataset]] = {}
+        self._swap_lock = threading.Lock()
+
+    def _install(self, name: str, ds: StoredDataset) -> StoredDataset:
+        """Atomically make ``ds`` the current generation of ``name``.
+
+        The flip is a single dict assignment under a lock; readers that
+        already hold the previous StoredDataset keep reading it unchanged
+        (generations are immutable)."""
+        with self._swap_lock:
+            prev = self.datasets.get(name)
+            if prev is not None:
+                ds.generation = prev.generation + 1
+                retired = self._retired.setdefault(name, [])
+                retired.append(prev)
+                if len(retired) > self.max_retired_generations:
+                    del retired[:len(retired)
+                                - self.max_retired_generations]
+            self.datasets[name] = ds
+        return ds
+
+    def generation_of(self, name: str) -> int:
+        return self.datasets[name].generation
 
     # -- write path (storage-time partitioning) ------------------------------
     def write(self, name: str, data: Columns,
@@ -131,12 +169,13 @@ class PartitionStore:
         ds = StoredDataset(name=name, columns=columns,
                            counts=counts.astype(np.int64),
                            partitioner=partitioner, num_rows=n, nbytes=nbytes)
-        self.datasets[name] = ds
+        self._install(name, ds)
         self.write_log.append({
             "name": name, "rows": n, "bytes": nbytes,
             "strategy": partitioner.strategy,
             "latency": time.perf_counter() - t0,
             "skew": ds.skew(),
+            "generation": ds.generation,
         })
         return ds
 
@@ -213,12 +252,22 @@ class PartitionStore:
         nbytes = int(sum(np.asarray(v).nbytes for v in flat_columns.values()))
         ds = StoredDataset(name=name, columns=columns, counts=counts,
                            partitioner=partitioner, num_rows=n, nbytes=nbytes)
-        self.datasets[name] = ds
-        return ds
+        return self._install(name, ds)
 
     # -- read path -------------------------------------------------------------
-    def read(self, name: str) -> StoredDataset:
-        return self.datasets[name]
+    def read(self, name: str,
+             generation: Optional[int] = None) -> StoredDataset:
+        """Current generation of ``name``; pass ``generation`` to resolve a
+        specific (possibly superseded, still-retained) one."""
+        ds = self.datasets[name]
+        if generation is None or ds.generation == generation:
+            return ds
+        for old in reversed(self._retired.get(name, [])):
+            if old.generation == generation:
+                return old
+        raise KeyError(f"{name}@gen{generation} not found "
+                       f"(current gen {ds.generation}, retains last "
+                       f"{self.max_retired_generations})")
 
     def stored_partitioners(self) -> Dict[str, Optional[PartitionerCandidate]]:
         return {n: d.partitioner for n, d in self.datasets.items()}
@@ -227,7 +276,7 @@ class PartitionStore:
     def repartition(self, ds: StoredDataset,
                     partitioner: PartitionerCandidate,
                     name: Optional[str] = None,
-                    mesh=None) -> Tuple[StoredDataset, int]:
+                    mesh=None, swap: bool = False) -> Tuple[StoredDataset, int]:
         """Full shuffle.  Returns (new ds, bytes moved).
 
         Bytes moved = (m-1)/m of the dataset on average (every row whose new
@@ -240,10 +289,15 @@ class PartitionStore:
         scatter into the new layout — with no host ``gather()``/concatenate.
         Pass ``mesh`` to commit the result back onto the mesh
         (``sharding_bridge.device_put_dataset``) so repartitioned datasets
-        stay mesh-placed."""
+        stay mesh-placed.
+
+        ``swap=True`` (DESIGN §8) rewrites the dataset *in place* as a new
+        generation under its own name: the whole shuffle materializes off
+        to the side, then one atomic pointer flip publishes it.  Concurrent
+        readers holding the previous generation keep a consistent view."""
         t0 = time.perf_counter()
         moved = int(ds.nbytes * (self.m - 1) / self.m)
-        name = name or ds.name + "@reparted"
+        name = name or (ds.name if swap else ds.name + "@reparted")
         if (self.backend == "device" and ds.backend == "device"
                 and partitioner.strategy == HASH
                 and partitioner.graph is not None):
@@ -253,18 +307,27 @@ class PartitionStore:
                                 partitioner=partitioner,
                                 num_rows=int(counts.sum()),
                                 nbytes=ds.nbytes)
-            self.datasets[name] = new
+            if mesh is not None:
+                from ..core.sharding_bridge import device_put_dataset
+                new = device_put_dataset(mesh, new)
+            self._install(name, new)
             self.write_log.append({
                 "name": name, "rows": new.num_rows, "bytes": new.nbytes,
                 "strategy": partitioner.strategy,
                 "latency": time.perf_counter() - t0,
                 "skew": new.skew(), "path": "d2d",
+                "generation": new.generation,
             })
         else:
             flat = ds.gather()
             new = self.write(name, flat, partitioner)
-        if mesh is not None:
-            from ..core.sharding_bridge import device_put_dataset
-            new = device_put_dataset(mesh, new)
-            self.datasets[name] = new
+            if mesh is not None:
+                from ..core.sharding_bridge import device_put_dataset
+                # same generation, mesh-placed columns — re-publish only if
+                # no newer generation landed while we were placing (CAS)
+                new = device_put_dataset(mesh, new)
+                with self._swap_lock:
+                    cur = self.datasets.get(name)
+                    if cur is not None and cur.generation == new.generation:
+                        self.datasets[name] = new
         return new, moved

@@ -1,0 +1,255 @@
+"""The Autopilot optimizer loop — "decide + apply" (DESIGN §8).
+
+:class:`StorageOptimizer` closes the paper's loop online: per ``tick()`` it
+walks every stored dataset, enumerates candidate layouts from the observed
+history (Alg. 1+2 over each consumer IR in the skeleton graph), lets a
+selector policy — greedy Eq. 2 or the DRL agent, both behind the same
+``select(feats, groups, dataset_bytes, state)`` interface — pick the
+preferred layout, prices it with the :class:`~repro.service.cost_model.
+WhatIfCostModel`, and when the modeled benefit clears the hysteresis
+threshold applies the :class:`~repro.core.advisor.PartitioningDecision`
+through ``PartitionStore.repartition(swap=True)`` — the device-to-device
+fast path when the store is device-backed — publishing a new generation
+with one atomic pointer flip.
+
+``tick()`` is the deterministic unit (tests, drift scenarios drive it
+directly); ``start(period_s)`` runs the same tick on a daemon thread for a
+live service.  Flip-flop guards: the hysteresis factor, a per-dataset
+cooldown after each applied decision, and a minimum observed-run count.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..core.advisor import (GreedySelector, PartitioningDecision,
+                            apply_decision)
+from ..core.features import build_state, candidate_features
+from ..core.history import HistoryStore
+from ..core.partitioner import dedupe, enumerate_candidates
+from .cost_model import LayoutScore, WhatIfCostModel
+from .observer import Observer
+
+
+@dataclass
+class AutopilotConfig:
+    hysteresis: float = 1.5        # benefit must exceed cost × this factor
+    window_s: float = float("inf")  # recency window for run-rate estimation
+    horizon_windows: float = 4.0   # future windows a layout keeps paying off
+    min_runs: float = 2.0          # observed runs before acting on a dataset
+    cooldown_ticks: int = 1        # ticks to skip a dataset after a swap
+    max_candidates: int = 12       # state-vector rows (advisor action space)
+    max_history_records: Optional[int] = None   # auto-compact bound
+    datasets: Optional[Tuple[str, ...]] = None  # allowlist (None = all)
+
+
+@dataclass
+class AppliedDecision:
+    """One autonomous repartition: the advisor decision, its what-if score,
+    and what actually happened when it was applied."""
+    dataset: str
+    decision: PartitioningDecision
+    score: LayoutScore
+    generation: int                # generation published by the swap
+    moved_bytes: int
+    repartition_wall_s: float
+    path: str                      # "d2d" | "host"
+
+
+@dataclass
+class TickReport:
+    tick: int
+    now: float
+    considered: List[Tuple[str, str, LayoutScore]] = field(
+        default_factory=list)      # (dataset, candidate sig, score)
+    applied: List[AppliedDecision] = field(default_factory=list)
+    compacted: int = 0
+
+
+class StorageOptimizer:
+    """The decide→apply loop over one store + one history."""
+
+    def __init__(self, store, history: HistoryStore, *,
+                 cost_model: Optional[WhatIfCostModel] = None,
+                 selector=None,
+                 config: Optional[AutopilotConfig] = None,
+                 mesh=None,
+                 clock: Callable[[], float] = time.time):
+        self.store = store
+        self.history = history
+        self.cost_model = cost_model or WhatIfCostModel()
+        self.selector = selector or GreedySelector()
+        self.cfg = config or AutopilotConfig()
+        self.mesh = mesh
+        self.clock = clock
+        self.reports: List[TickReport] = []
+        self._cooldown: Dict[str, int] = {}
+        self._tick_no = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.last_error: Optional[BaseException] = None
+
+    # -- candidate enumeration over the observed consumer IRs ----------------
+    def _enumerate(self, dataset: str, groups):
+        cands, cand_groups, rel_groups = [], {}, []
+        for sig in sorted(groups):
+            ir = self.history.ir_of(sig)
+            if ir is None or ir.find_scanner(dataset) is None:
+                continue
+            rel_groups.append(groups[sig])
+            for c in enumerate_candidates(ir, dataset):
+                cands.append(c)
+                cand_groups.setdefault(c.signature(), []).append(groups[sig])
+        return dedupe(cands), cand_groups, rel_groups
+
+    # -- one deterministic pass over the store -------------------------------
+    def tick(self) -> TickReport:
+        """Score every dataset against one calibration snapshot, then apply
+        the decisions that cleared the gates (two-phase, so the order the
+        store iterates in never skews a later dataset's pricing).
+
+        The clock is read without advancing when it supports ``peek()``
+        (LogicalClock): scoring a tick must not age the history it scores,
+        or idle polling alone would push observed runs out of the recency
+        window."""
+        peek = getattr(self.clock, "peek", None)
+        now = peek() if peek is not None else self.clock()
+        self._tick_no += 1
+        report = TickReport(tick=self._tick_no, now=now)
+        to_apply: List[Tuple[PartitioningDecision, LayoutScore]] = []
+        # one O(records²) skeleton build per tick, shared by every dataset's
+        # enumeration and what-if score
+        groups, _ = self.history.skeleton_graph()
+        for name in sorted(self.store.datasets):
+            if self.cfg.datasets is not None and name not in self.cfg.datasets:
+                continue
+            if self._cooldown.get(name, 0) > 0:
+                self._cooldown[name] -= 1
+                continue
+            ds = self.store.read(name)
+            cands, cand_groups, rel_groups = self._enumerate(name, groups)
+            if not cands:
+                continue
+
+            # policy pick (greedy Eq. 2 / DRL — one interface)
+            t0 = time.perf_counter()
+            feats = [candidate_features(c,
+                                        cand_groups.get(c.signature(), []),
+                                        self.history, now)
+                     for c in cands]
+            state = build_state(feats, float(ds.nbytes),
+                                self.cfg.max_candidates, now=now)
+            idx = self.selector.select(feats, rel_groups, float(ds.nbytes),
+                                       state)
+            idx = max(0, min(int(idx), len(feats) - 1))
+            cand = feats[idx].candidate
+            decision = PartitioningDecision(
+                dataset=name, candidate=cand, features=feats,
+                consumers=[g.ir_signature for g in rel_groups],
+                action_index=idx, state=state,
+                elapsed_s=time.perf_counter() - t0)
+
+            # what-if gate against the live layout
+            score = self.cost_model.score(
+                name, float(ds.nbytes), ds.num_workers, cand,
+                ds.partitioner, self.history, now=now,
+                window_s=self.cfg.window_s, groups=groups)
+            report.considered.append((name, cand.signature(), score))
+            if (ds.partitioner is not None
+                    and ds.partitioner.signature() == cand.signature()):
+                continue                      # already laid out this way
+            if score.runs_in_window < self.cfg.min_runs:
+                continue
+            if not score.worth_it(self.cfg.hysteresis,
+                                  self.cfg.horizon_windows):
+                continue
+            to_apply.append((decision, score))
+
+        for decision, score in to_apply:
+            # apply: materialize off to the side, atomically flip (swap)
+            name = decision.dataset
+            ds_bytes = float(self.store.read(name).nbytes)
+            t1 = time.perf_counter()
+            new, moved = apply_decision(self.store, decision, mesh=self.mesh)
+            wall = time.perf_counter() - t1
+            self.cost_model.observe_repartition(ds_bytes, wall)
+            self._cooldown[name] = self.cfg.cooldown_ticks
+            path = "host"
+            if self.store.write_log and \
+                    self.store.write_log[-1].get("name") == name:
+                path = self.store.write_log[-1].get("path", "host")
+            report.applied.append(AppliedDecision(
+                dataset=name, decision=decision, score=score,
+                generation=new.generation, moved_bytes=moved,
+                repartition_wall_s=wall, path=path))
+        if self.cfg.max_history_records is not None:
+            report.compacted = self.history.compact(
+                self.cfg.max_history_records)
+        self.reports.append(report)
+        return report
+
+    # -- background service mode ---------------------------------------------
+    def start(self, period_s: float = 1.0) -> None:
+        """Run ``tick()`` on a daemon thread every ``period_s`` until
+        :meth:`stop`.  Exceptions land in ``last_error`` (and stop the
+        loop) rather than killing the host process."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("optimizer already running")
+        self._stop.clear()
+
+        def _loop():
+            while not self._stop.wait(period_s):
+                try:
+                    self.tick()
+                except BaseException as e:     # noqa: BLE001 — report & halt
+                    self.last_error = e
+                    return
+
+        self._thread = threading.Thread(
+            target=_loop, name="lachesis-autopilot", daemon=True)
+        self._thread.start()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+
+class Autopilot:
+    """Facade wiring the whole subsystem to one engine: Observer (history +
+    throughput calibration) + WhatIfCostModel + StorageOptimizer.
+
+        eng = Engine(store)
+        ap = Autopilot(eng, clock=LogicalClock())
+        eng.run(workload)          # observed automatically
+        ap.tick()                  # decide + apply + swap generations
+    """
+
+    def __init__(self, engine, *, clock: Optional[Callable[[], float]] = None,
+                 config: Optional[AutopilotConfig] = None,
+                 selector=None, history: Optional[HistoryStore] = None,
+                 bench_path: Optional[str] = None, mesh=None):
+        clock = clock or time.time
+        self.history = history if history is not None else HistoryStore()
+        self.cost_model = WhatIfCostModel(bench_path=bench_path)
+        self.observer = Observer(
+            self.history, clock=clock, cost_model=self.cost_model,
+            max_records=(config.max_history_records if config else None))
+        self.observer.attach(engine)
+        self.optimizer = StorageOptimizer(
+            engine.store, self.history, cost_model=self.cost_model,
+            selector=selector, config=config, mesh=mesh, clock=clock)
+        self.engine = engine
+
+    def tick(self) -> TickReport:
+        return self.optimizer.tick()
+
+    def start(self, period_s: float = 1.0) -> None:
+        self.optimizer.start(period_s)
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self.optimizer.stop(timeout)
