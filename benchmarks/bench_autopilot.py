@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import Engine
+from repro.api import Session
 from repro.core.history import HistoryStore
 from repro.data.partition_store import PartitionStore
 
@@ -51,14 +51,14 @@ def drift_rows(backend: str) -> None:
 
 
 def observer_overhead() -> None:
-    """Auto-recording cost: engine wall with history on vs off."""
+    """Auto-recording cost: session wall with history on vs off."""
     from repro.service import drift_tables, q_orderkey
     tables = drift_tables(n_lineitem=scale(200_000, 12_000),
                           n_orders=scale(20_000, 1_500))
     store = PartitionStore(num_workers=8)
     for name in ("lineitem", "orders"):
         store.write(name, tables[name])
-    eng = Engine(store)
+    sess = Session(store)
     wl = q_orderkey()
     reps = 5
 
@@ -66,13 +66,13 @@ def observer_overhead() -> None:
         best = float("inf")
         for _ in range(reps):
             t0 = time.perf_counter()
-            eng.run(wl, history=history,
-                    timestamp=0.0 if history else None)
+            sess.run(wl, history=history,
+                     timestamp=0.0 if history else None)
             best = min(best, time.perf_counter() - t0)
         return best
 
     base = best_wall(None)
-    eng.run(wl)          # warm
+    sess.run(wl)         # warm
     observed = best_wall(HistoryStore())
     emit("autopilot_observer_overhead", (observed - base) * 1e6,
          f"auto ExecutionRecord per run: {observed / base - 1:+.1%} of "

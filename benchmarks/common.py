@@ -17,7 +17,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import Engine, HistoryStore, partitioning_creation
+from repro.api import Session
+from repro.core import HistoryStore, partitioning_creation
 from repro.core.advisor import GreedySelector
 from repro.data.partition_store import PartitionStore
 
@@ -37,12 +38,16 @@ def scale(n: int, smoke_n: int) -> int:
 
 def run_consumer(store: PartitionStore, workload, repeats: int = 3,
                  backend: str = "host"):
-    eng = Engine(store, backend=backend)
+    sess = Session(store, backend=backend)
     best = None
+    match_s = 0.0
     for _ in range(repeats):
         t0 = time.perf_counter()
-        _vals, stats = eng.run(workload)
+        _vals, stats = sess.run(workload)
         wall = time.perf_counter() - t0
+        # Alg. 4 runs at plan time, so only the compiling (cache-miss) run
+        # carries it; cache hits report 0 — keep the real matching cost
+        match_s = max(match_s, stats.match_overhead_s)
         if best is None or wall < best[0]:
             best = (wall, stats)
     wall, stats = best
@@ -52,7 +57,7 @@ def run_consumer(store: PartitionStore, workload, repeats: int = 3,
             "shuffles": stats.shuffles_performed,
             "elided": stats.shuffles_elided,
             "device_repartitions": stats.device_repartitions,
-            "match_overhead_s": stats.match_overhead_s}
+            "match_overhead_s": match_s}
 
 
 def advisor_decide(producer, dataset, consumer, cand_sig, *,

@@ -1,20 +1,22 @@
-"""Quickstart: the Lachesis loop in 60 lines.
+"""Quickstart: the Lachesis loop in 60 lines, via ``lachesis.Session``.
 
 1. Trace two workloads (a loader and a join) in the DSL.
 2. Log historical executions; the advisor (Alg. 3) extracts partitioner
    candidates from the consumer IR and picks one.
 3. Store data with the chosen persistent partitioning.
-4. Run the consumer: the matcher (Alg. 4) elides both shuffles.
+4. ``session.explain`` shows the compiled PhysicalPlan: both shuffles are
+   statically elided (Alg. 4 at plan time); ``session.run`` executes it,
+   and a second run is a pure plan-cache hit.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import (Engine, HistoryStore, author_integrator,
+import lachesis
+from repro.core import (HistoryStore, author_integrator,
                         enumerate_candidates, partitioning_creation)
 from repro.core.dsl import reddit_loader
-from repro.data.partition_store import PartitionStore
 
 # -- 1. workloads ------------------------------------------------------------
 loader = reddit_loader("submission-loader", "raw", "submissions", "json")
@@ -43,26 +45,31 @@ rng = np.random.default_rng(0)
 subs = {"author": rng.integers(0, 1000, 20_000), "score": rng.normal(size=20_000)}
 auths = {"author": np.arange(1000), "karma": rng.normal(size=1000)}
 
-store = PartitionStore(num_workers=8)
-store.write("submissions", subs, decision.candidate)
-store.write("authors", auths,
-            enumerate_candidates(consumer.graph, "authors")[0])
+session = lachesis.Session(num_workers=8)
+session.write("submissions", subs, decision.candidate)
+session.write("authors", auths,
+              enumerate_candidates(consumer.graph, "authors")[0])
 
-# -- 4. shuffle-free execution -----------------------------------------------------
-vals, stats = Engine(store).run(consumer)
+# -- 4. plan, then execute shuffle-free --------------------------------------------
+print(session.explain(consumer))        # both partition nodes: ELIDED
+result = session.run(consumer)
+stats = result.stats
 print(f"join ran with {stats.shuffles_performed} shuffles "
       f"({stats.shuffles_elided} elided, {stats.shuffle_bytes} bytes moved)")
 assert stats.shuffles_performed == 0
-print("OK — persistent partitioning made the join local.")
+rerun = session.run(consumer)           # same workload, same layout ⇒ hit
+assert rerun.stats.plan_cache_hit
+print("OK — persistent partitioning made the join local; re-run was a "
+      f"pure plan-cache hit ({session.plan_cache_stats()}).")
 
-# -- 5. the device repartition path (DESIGN §5) ------------------------------------
-# With a round-robin store the shuffles are real; backend="device" routes
-# them through the Pallas hash-partition kernel (interpret mode off-TPU),
-# bit-identical to the host path.
-rr_store = PartitionStore(num_workers=8)
-rr_store.write("submissions", subs)
-rr_store.write("authors", auths)
-_, dev_stats = Engine(rr_store, backend="device").run(consumer)
+# -- 5. the device backend (DESIGN §5/§9) ------------------------------------------
+# With a round-robin store the shuffles are real; backend="device" binds
+# the partition nodes to the cached single-pass ShufflePlans (Pallas
+# kernels on TPU, interpret mode off-TPU), bit-identical to the host path.
+dev = lachesis.Session(num_workers=8, backend="device")
+dev.write("submissions", subs)
+dev.write("authors", auths)
+dev_stats = dev.run(consumer).stats
 assert dev_stats.device_repartitions == dev_stats.shuffles_performed == 2
 print(f"device backend: {dev_stats.device_repartitions} repartitions ran "
-      "through the Pallas kernel.")
+      "through the ShufflePlan path.")

@@ -11,6 +11,8 @@
 #             the headline device-repartition rows keep their full N so the
 #             perf trajectory stays comparable across BENCH_*.json
 #             snapshots).  Writes BENCH_smoke.json unless a path is given.
+#             The snapshot includes the plan_compile_vs_exec and
+#             plan_cached_rerun_* rows (planner/executor split, DESIGN §9).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -29,6 +31,14 @@ fi
 
 python -m pip install -q -r requirements-dev.txt || \
     echo "WARN: dev deps not installed (offline?) — property tests will skip"
+
+# Lint gate (critical rules only — see ruff.toml).  Skipped with a warning
+# when ruff is unavailable (offline container); CI always installs it.
+if python -m ruff --version >/dev/null 2>&1; then
+    python -m ruff check src tests
+else
+    echo "WARN: ruff not installed — lint gate skipped"
+fi
 
 JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q "$@"

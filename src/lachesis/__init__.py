@@ -1,0 +1,34 @@
+"""``lachesis`` — the stable public API surface of the reproduction.
+
+A thin namespace over :mod:`repro`:
+
+    import lachesis
+
+    sess = lachesis.Session(num_workers=8, backend="device")
+    sess.write("submissions", subs)
+    res = sess.run(workload)
+    print(sess.explain(workload))
+
+Everything here is re-exported from ``repro.api`` / ``repro.core`` /
+``repro.service``; the implementation package keeps its historical name,
+this module is the import users program against.
+"""
+
+from repro.api import RunResult, Session, StalePlanError, UnknownBackendError
+from repro.core.backends import (Backend, BackendRegistry, REGISTRY,
+                                 backend_names, resolve_backend)
+from repro.core.dsl import Workload
+from repro.core.executor import EngineStats as RunStats
+from repro.core.planner import LogicalPlan, PhysicalPlan, Planner
+
+__all__ = [
+    "Session", "RunResult", "RunStats", "Workload",
+    "LogicalPlan", "PhysicalPlan", "Planner",
+    "Backend", "BackendRegistry", "REGISTRY", "backend_names",
+    "resolve_backend", "UnknownBackendError", "StalePlanError",
+]
+
+
+def autopilot(session, **kw):
+    """Convenience: attach an online storage optimizer to ``session``."""
+    return session.autopilot(**kw)

@@ -1,0 +1,287 @@
+"""The stable public API: ``lachesis.Session`` (DESIGN §9).
+
+One facade over the whole pipeline::
+
+    Workload DSL  →  LogicalPlan  →  PhysicalPlan  →  Executor
+                      (normalize,      (bind backend      (run the
+                       Alg. 1+2)        ops + Alg. 4       frozen steps)
+                                        static elision,
+                                        cached by layout
+                                        generation)
+
+    import lachesis
+
+    sess = lachesis.Session(num_workers=8, backend="device")
+    sess.write("submissions", subs, cand)        # storage-time partitioning
+    sess.write("authors", auths)
+
+    reviews = sess.scan("submissions")           # DSL passthrough builds an
+    authors = sess.scan("authors")               # implicit workload...
+    j = sess.join(reviews, authors,
+                  left_key=reviews["author"], right_key=authors["author"])
+    sess.write_result(j, "integrated")
+    result = sess.run()                          # ...and run() executes it
+
+    print(sess.explain(wl))                      # deterministic plan dump
+    vals, stats = sess.run(wl)                   # tuple unpacking supported
+    ap = sess.autopilot()                        # attach the online optimizer
+
+Repeated ``run`` of an unchanged workload on an unchanged store layout is
+a pure PhysicalPlan-cache hit: no candidate extraction, no Alg. 4, and no
+jax re-trace (``plan_cache_stats()['traces']`` stays flat).  A layout
+generation flip (repartition, rewrite) invalidates exactly the plans that
+scan the flipped dataset.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .core.backends import (Backend, BackendRegistry, REGISTRY,
+                            UnknownBackendError)
+from .core.dsl import Col, SetHandle, Workload
+from .core.executor import (EngineStats, Executor, StalePlanError, TableVal,
+                            plan_and_execute)
+from .core.planner import LogicalPlan, PhysicalPlan, Planner
+from .data.partition_store import PartitionStore, StoredDataset
+
+__all__ = ["Session", "RunResult", "UnknownBackendError", "StalePlanError"]
+
+RunStats = EngineStats   # the stats schema, under its API-facing name
+
+
+@dataclass
+class RunResult:
+    """What ``Session.run`` returns: node values + stats + the plan that
+    produced them.  Iterable as ``(values, stats)`` so legacy
+    ``vals, stats = run(...)`` call sites migrate without edits."""
+    values: Dict[int, Any]
+    stats: EngineStats
+    plan: PhysicalPlan
+    workload: Workload
+
+    def __iter__(self):
+        return iter((self.values, self.stats))
+
+    def value_of(self, handle) -> Any:
+        """Value produced at a DSL handle (``Col``/``SetHandle``) or nid."""
+        nid = handle._nid if isinstance(handle, Col) else int(handle)
+        return self.values[nid]
+
+    def table(self, handle) -> TableVal:
+        v = self.value_of(handle)
+        if not isinstance(v, TableVal):
+            raise TypeError(f"node {handle} produced {type(v).__name__}, "
+                            "not a set-valued table")
+        return v
+
+
+class Session:
+    """The single entry point for storing, planning and running workloads.
+
+    Owns one :class:`~repro.data.partition_store.PartitionStore`, one
+    :class:`~repro.core.planner.Planner` (with its PhysicalPlan cache) and
+    one :class:`~repro.core.executor.Executor`.  Thread-compatible with a
+    background :class:`~repro.service.Autopilot`: generation-keyed plans
+    mean an autonomous repartition simply causes the next run to re-plan.
+    """
+
+    def __init__(self, store: Optional[PartitionStore] = None, *,
+                 num_workers: int = 8, backend: str = "host",
+                 matching: bool = True, interpret: Optional[bool] = None,
+                 net_bandwidth: float = 1.25e9,
+                 history=None, registry: Optional[BackendRegistry] = None,
+                 plan_cache_capacity: int = 128):
+        self.registry = registry or REGISTRY
+        self._backend: Backend = self.registry.get(backend)
+        if store is None:
+            store = PartitionStore(num_workers=num_workers,
+                                   backend=self._backend.name
+                                   if self._backend.device_resident
+                                   else "host",
+                                   interpret=interpret,
+                                   registry=self.registry)
+        self.net_bandwidth = net_bandwidth
+        self.history = history
+        self.run_hooks: List[Callable[[Any, EngineStats], None]] = []
+        self.planner = Planner(store, registry=self.registry,
+                               matching=matching,
+                               cache_capacity=plan_cache_capacity)
+        self.executor = Executor(store, interpret=interpret)
+        self._current: Optional[Workload] = None
+        self._wl_counter = 0
+
+    # -- backend / knobs -----------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return self._backend.name
+
+    @property
+    def store(self):
+        return self.planner.store
+
+    # matching/interpret forward into the planner/executor: mutating them
+    # takes effect on the next run (matching is part of the plan-cache key)
+    @property
+    def matching(self) -> bool:
+        return self.planner.matching
+
+    @matching.setter
+    def matching(self, v: bool) -> None:
+        self.planner.matching = bool(v)
+
+    @property
+    def interpret(self) -> Optional[bool]:
+        return self.executor.interpret
+
+    @interpret.setter
+    def interpret(self, v: Optional[bool]) -> None:
+        self.executor.interpret = v
+
+    @property
+    def num_workers(self) -> int:
+        return self.store.m
+
+    # -- workload building (DSL passthrough) --------------------------------
+    def workload(self, app_id: Optional[str] = None) -> Workload:
+        """Start (and make current) a fresh traced workload."""
+        if app_id is None:
+            self._wl_counter += 1
+            app_id = f"session-wl-{self._wl_counter}"
+        self._current = Workload(app_id)
+        return self._current
+
+    @property
+    def current(self) -> Optional[Workload]:
+        return self._current
+
+    def scan(self, dataset: str) -> SetHandle:
+        """Scan a stored dataset into the current workload (creating one
+        implicitly if none is active)."""
+        wl = self._current if self._current is not None else self.workload()
+        return wl.scan(dataset)
+
+    # Each passthrough operates on the workload that owns the handle, so
+    # mixing handles from an explicit Workload also works.
+    def partition(self, key: Col, strategy: str = "hash") -> SetHandle:
+        return key._wl.partition(key, strategy)
+
+    def join(self, left: SetHandle, right: SetHandle, **kw) -> SetHandle:
+        return left._wl.join(left, right, **kw)
+
+    def aggregate(self, x: SetHandle, **kw) -> SetHandle:
+        return x._wl.aggregate(x, **kw)
+
+    def filter(self, x: SetHandle, pred: Col) -> SetHandle:
+        return x._wl.filter(x, pred)
+
+    def map(self, x: SetHandle, fn: Callable, tag: str) -> SetHandle:
+        return x._wl.map(x, fn, tag)
+
+    def flatten(self, x: SetHandle) -> SetHandle:
+        return x._wl.flatten(x)
+
+    def write_result(self, x: SetHandle, dataset: str) -> SetHandle:
+        """Terminal write of a workload branch (``Workload.write``).  Named
+        distinctly from :meth:`write`, which stores host data directly."""
+        return x._wl.write(x, dataset)
+
+    # -- planning ------------------------------------------------------------
+    def plan(self, workload: Optional[Workload] = None,
+             backend: Optional[str] = None) -> PhysicalPlan:
+        """Compiled (cached) PhysicalPlan for ``workload`` on the current
+        store layout."""
+        plan, _hit = self.planner.physical(self._resolve_wl(workload),
+                                           self._resolve_backend(backend))
+        return plan
+
+    def logical_plan(self, workload: Optional[Workload] = None) -> LogicalPlan:
+        return self.planner.logical(self._resolve_wl(workload))
+
+    def explain(self, workload: Optional[Workload] = None,
+                backend: Optional[str] = None) -> str:
+        """Deterministic plan dump: per partition node the elide/shuffle
+        decision (Alg. 4 applied statically), the bound backend op and the
+        ShufflePlan bucket; plus the layout pins keying the plan cache."""
+        return self.plan(workload, backend).explain()
+
+    # -- execution -----------------------------------------------------------
+    def run(self, workload: Optional[Workload] = None, *,
+            backend: Optional[str] = None, history=None,
+            timestamp: Optional[float] = None) -> RunResult:
+        """Plan (or fetch the cached plan) and execute.
+
+        Without ``workload``, runs the session's current implicit workload
+        (built via the scan/join/... passthroughs) and clears it once the
+        run succeeds — a failed run keeps it so it can be retried.  A
+        layout swap racing the run (background Autopilot) triggers a
+        transparent re-plan, never an error."""
+        wl = self._resolve_wl(workload)
+        history = self.history if history is None else history
+        vals, stats, plan = plan_and_execute(
+            self.planner, self.executor, wl, self._resolve_backend(backend),
+            history=history, hooks=tuple(self.run_hooks),
+            timestamp=timestamp)
+        if workload is None and wl is self._current:
+            self._current = None
+        return RunResult(values=vals, stats=stats, plan=plan, workload=wl)
+
+    def add_run_hook(self, fn: Callable[[Any, EngineStats], None]) -> None:
+        """Register ``fn(workload, stats)`` to fire after every run (the
+        service Observer attaches here)."""
+        self.run_hooks.append(fn)
+
+    # -- plan cache ----------------------------------------------------------
+    def plan_cache_stats(self) -> Dict[str, int]:
+        """Planner cache counters merged with the jax-level ShufflePlan
+        trace counter: ``traces`` flat across repeated runs is the
+        no-retrace guarantee."""
+        from .data.device_repartition import plan_cache_stats as dev_stats
+        out = self.planner.cache_stats()
+        out["traces"] = dev_stats()["traces"]
+        return out
+
+    def clear_plan_cache(self) -> None:
+        self.planner.clear_cache()
+
+    def invalidate(self, dataset: Optional[str] = None) -> int:
+        """Eagerly drop cached plans scanning ``dataset`` (all if None)."""
+        return self.planner.invalidate(dataset)
+
+    # -- storage passthrough ---------------------------------------------------
+    def write(self, name: str, data: Dict[str, Any], partitioner=None,
+              seed: int = 0) -> StoredDataset:
+        """Persist host columns under ``name`` (storage-time partitioning)."""
+        return self.store.write(name, data, partitioner, seed=seed)
+
+    def read(self, name: str,
+             generation: Optional[int] = None) -> StoredDataset:
+        return self.store.read(name, generation=generation)
+
+    def repartition(self, name: str, partitioner, *, mesh=None,
+                    swap: bool = True):
+        """Repartition a stored dataset (publishes a new generation; the
+        affected cached plans miss on their next lookup)."""
+        ds = self.store.read(name)
+        return self.store.repartition(ds, partitioner, mesh=mesh, swap=swap)
+
+    # -- service attach --------------------------------------------------------
+    def autopilot(self, **kw):
+        """Attach an online storage optimizer (observer + cost model +
+        decide/apply loop) to this session; returns the
+        :class:`~repro.service.Autopilot`."""
+        from .service import Autopilot
+        return Autopilot(self, **kw)
+
+    # -- internals ---------------------------------------------------------------
+    def _resolve_wl(self, workload: Optional[Workload]) -> Workload:
+        if workload is not None:
+            return workload
+        if self._current is None:
+            raise ValueError("no workload: pass one to run()/plan() or "
+                             "build the implicit one via session.scan(...)")
+        return self._current
+
+    def _resolve_backend(self, backend: Optional[str]) -> Backend:
+        return self._backend if backend is None else self.registry.get(backend)

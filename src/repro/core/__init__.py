@@ -5,7 +5,10 @@
 #   history          — workflow analyzer + skeleton graph (§3.1.1)
 #   features         — candidate state vector (§3.1.3)
 #   advisor          — end-to-end partitioning_creation (Alg. 3)
-#   engine           — partition-aware workload executor (§4)
+#   backends         — capability-queried backend registry (DESIGN §9)
+#   planner          — Workload → LogicalPlan → PhysicalPlan + plan cache
+#   executor         — runs frozen PhysicalPlans (§4 semantics)
+#   engine           — legacy eager facade, now a deprecation shim
 #   drl              — actor-critic selector + trace simulator (§3.1.3, §4.3)
 #   sharding_bridge  — partitionings ⇄ JAX NamedShardings (TPU adaptation)
 
@@ -19,4 +22,8 @@ from .history import HistoryStore, ExecutionRecord, SkeletonNode
 from .features import candidate_features, build_state, state_dim
 from .advisor import (partitioning_creation, apply_decision,
                       PartitioningDecision, GreedySelector, DRLSelector)
+from .backends import (Backend, BackendRegistry, REGISTRY,
+                       UnknownBackendError, resolve_backend)
+from .planner import LogicalPlan, PhysicalPlan, PlanKey, PlanStep, Planner
+from .executor import Executor, StalePlanError
 from .engine import Engine, EngineStats, TableVal

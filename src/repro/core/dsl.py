@@ -131,8 +131,8 @@ class Workload:
         the IR shape of Fig. 2 in the paper (after join-strategy selection)."""
         lp = self.partition(left_key, strategy)
         rp = self.partition(right_key, strategy)
-        nid = self.graph.add_node(f"join", {"projection": projection,
-                                            "tag": tag})
+        nid = self.graph.add_node("join", {"projection": projection,
+                                           "tag": tag})
         self.graph.add_edge(lp._nid, nid)
         self.graph.add_edge(rp._nid, nid)
         return SetHandle(self, nid)

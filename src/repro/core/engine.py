@@ -1,119 +1,88 @@
-"""Workload executor with partition-aware scheduling (paper §4, §5).
+"""Engine — the legacy eager entry point, now a deprecation shim.
 
-Interprets a traced :class:`~repro.core.dsl.Workload` IR over a
-:class:`~repro.data.partition_store.PartitionStore`.  The scheduler decision
-the paper cares about happens at every ``partition`` node: if the stored
-persistent partitioning *matches* the node's candidate signature (Alg. 4),
-the shuffle is **elided** and the downstream join/aggregate runs strictly
-worker-locally; otherwise a real repartition (gather + re-bucket) runs and
-its cost is measured.
+Historically this module *was* the execution surface: ``Engine.run``
+interpreted the traced IR node-by-node, re-extracting partitioner
+candidates and re-running Alg. 4 on every run.  The planner/executor
+split (DESIGN §9) moved that policy into
+:class:`~repro.core.planner.Planner` (Workload → LogicalPlan →
+PhysicalPlan, cached by IR signature × store layout generation) and the
+mechanics into :class:`~repro.core.executor.Executor`; the public facade
+is :class:`repro.api.Session` (aka ``lachesis.Session``).
 
-Execution is columnar (numpy host-side — storage-layer compute), with the
-per-worker layout carried through so local operators stay local.  Join
-restriction: the right side must have unique keys (all paper workloads —
-authors, ranks, matrix blocks — satisfy this); documented in DESIGN.md §3.
+``Engine`` remains as a thin shim so existing call sites keep working
+bit-identically — it plans through the same cache and executes the same
+steps — but every ``Engine.run`` emits a :class:`DeprecationWarning`.
+Migration is mechanical::
 
-Backends (DESIGN §5): ``backend="host"`` repartitions with numpy;
-``backend="device"`` routes every hash repartition through one cached
-single-pass shuffle plan (hash → counting-sort permutation → packed
-gather; the fused Pallas kernels on TPU), bit-identical to the host path,
-and relays device-resident flats (``TableVal.device_columns``) from scans
-of device-backed stores through repartitions into store writes so the
-chain never re-uploads payload bytes.
+    eng = Engine(store, backend="device")      # before
+    vals, stats = eng.run(wl)
+
+    sess = Session(store, backend="device")    # after
+    res = sess.run(wl)                         # res.values, res.stats
+    vals, stats = sess.run(wl)                 # tuple-unpacking still works
+
+``TableVal`` and ``EngineStats`` are re-exported from
+:mod:`repro.core.executor`, their new home.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-import numpy as np
+from .backends import UnknownBackendError, resolve_backend  # noqa: F401
+from .executor import (EngineStats, Executor, StalePlanError,  # noqa: F401
+                       TableVal, plan_and_execute)
+from .planner import Planner
 
-from .ir import IRGraph, resolve_fn
-from .matching import partitioning_match
-from .partitioner import PartitionerCandidate, merge, search
-from ..data.device_repartition import device_flat_columns, \
-    device_rebucket_full
-from ..data.partition_store import BACKENDS, PartitionStore, StoredDataset
-
-Columns = Dict[str, np.ndarray]
-
-
-@dataclass
-class TableVal:
-    """A set-valued intermediate: flat columns + per-worker segmentation.
-
-    ``device_columns`` is the device-to-device relay (DESIGN §5): flat
-    jax-array copies of (a subset of) ``columns`` left on device by a scan
-    of a device-backed dataset or by a device repartition.  Row-preserving
-    nodes pass it through; the next device stage (repartition, store write)
-    consumes it instead of re-uploading the host columns.  Any row-changing
-    op (join, aggregate, filter, flatten, map) drops it."""
-    columns: Columns
-    counts: np.ndarray                       # (m,) rows per worker segment
-    partitioner: Optional[PartitionerCandidate] = None   # current layout
-    device_columns: Optional[Columns] = None             # flat jax arrays
-
-    @property
-    def num_rows(self) -> int:
-        return int(self.counts.sum())
-
-    @property
-    def m(self) -> int:
-        return int(self.counts.shape[0])
-
-    def offsets(self) -> np.ndarray:
-        return np.concatenate([[0], np.cumsum(self.counts)[:-1]]).astype(np.int64)
-
-    def worker_slice(self, w: int) -> Columns:
-        o = self.offsets()
-        return {k: v[o[w]:o[w] + self.counts[w]] for k, v in self.columns.items()}
-
-    def nbytes(self) -> int:
-        return int(sum(v.nbytes for v in self.columns.values()))
-
-
-@dataclass
-class EngineStats:
-    shuffles_elided: int = 0
-    shuffles_performed: int = 0
-    shuffle_bytes: int = 0
-    device_repartitions: int = 0     # shuffles routed through the Pallas path
-    match_overhead_s: float = 0.0
-    stage_latency: Dict[str, float] = field(default_factory=dict)
-    wall_s: float = 0.0
-    shuffle_s: float = 0.0           # wall time spent inside real shuffles
-    input_bytes: int = 0             # bytes scanned from the store
-    output_bytes: int = 0            # bytes written back to the store
-    # per-candidate runtime stats for this run (ExecutionRecord schema),
-    # keyed by candidate signature; None unless the run is being observed
-    # (history / run hooks attached) — the np.unique pass isn't free.
-    candidate_stats: Optional[Dict[str, Dict[str, float]]] = None
-
-    def modeled_network_s(self, bandwidth: float = 1.25e9) -> float:
-        return self.shuffle_bytes / bandwidth
+__all__ = ["Engine", "EngineStats", "TableVal", "StalePlanError",
+           "UnknownBackendError"]
 
 
 class Engine:
-    def __init__(self, store: PartitionStore,
-                 enable_lachesis_matching: bool = True,
+    """Deprecated facade over ``Planner`` + ``Executor``.
+
+    Prefer :class:`repro.api.Session`; this shim exists so pre-split call
+    sites (and their tests) keep passing unchanged.
+    """
+
+    def __init__(self, store, enable_lachesis_matching: bool = True,
                  net_bandwidth: float = 1.25e9,
                  backend: str = "host",
                  interpret: Optional[bool] = None,
                  history=None):
-        if backend not in BACKENDS:
-            raise ValueError(f"backend must be one of {BACKENDS}")
-        self.store = store
-        self.matching = enable_lachesis_matching
+        self.backend = resolve_backend(backend).name   # UnknownBackendError
         self.net_bandwidth = net_bandwidth
-        self.backend = backend
-        self.interpret = interpret   # None → auto (interpret mode off-TPU)
         # observation hooks (DESIGN §8): `history` auto-logs an
         # ExecutionRecord per run; run_hooks fire with (workload, stats)
         # after every run (the service's Observer attaches here).
         self.history = history
         self.run_hooks: List[Callable[[Any, EngineStats], None]] = []
+        # the same planning/execution stack Session uses
+        self.planner = Planner(store, matching=enable_lachesis_matching)
+        self.executor = Executor(store, interpret=interpret)
+
+    # mutable knobs forward into the planner/executor so the historical
+    # `eng.matching = False` / `eng.interpret = True` idioms keep working
+    @property
+    def store(self):
+        return self.planner.store
+
+    @property
+    def matching(self) -> bool:
+        return self.planner.matching
+
+    @matching.setter
+    def matching(self, v: bool) -> None:
+        self.planner.matching = bool(v)
+
+    @property
+    def interpret(self) -> Optional[bool]:
+        return self.executor.interpret
+
+    @interpret.setter
+    def interpret(self, v: Optional[bool]) -> None:
+        self.executor.interpret = v
 
     def add_run_hook(self, fn: Callable[[Any, EngineStats], None]) -> None:
         """Register ``fn(workload, stats)`` to fire after every run."""
@@ -124,290 +93,23 @@ class Engine:
             history=None,
             timestamp: Optional[float] = None
             ) -> Tuple[Dict[int, Any], EngineStats]:
-        """Execute ``workload``; returns ``(node values, stats)``.
+        """Deprecated: plan + execute in one call (use ``Session.run``).
 
-        With ``history`` (or a constructor-level ``history``) attached, an
-        :class:`~repro.core.history.ExecutionRecord` is appended
-        automatically — app id, IR signature, latency, input/output bytes
-        and per-candidate selectivity/distinct-key stats measured at each
-        partition node — closing the paper's observe loop without
-        hand-built records.  ``timestamp`` overrides the record's wall
-        clock (deterministic tests / logical clocks)."""
-        backend = self.backend if backend is None else backend
-        if backend not in BACKENDS:
-            raise ValueError(f"backend must be one of {BACKENDS}")
+        Semantics are unchanged from the eager interpreter: same values,
+        same stats schema, history/hook observation identical — but the
+        run now goes through the PhysicalPlan cache, so repeated runs of
+        a frozen workload skip candidate extraction and Alg. 4 entirely.
+        """
+        warnings.warn(
+            "Engine.run is deprecated; use lachesis.Session "
+            "(repro.api.Session) — session.run(workload) returns the same "
+            "(values, stats) and adds plan caching and explain()",
+            DeprecationWarning, stacklevel=2)
+        backend = self.backend if backend is None else \
+            resolve_backend(backend).name
         history = self.history if history is None else history
-        g: IRGraph = workload.graph
-        stats = EngineStats()
-        if history is not None or self.run_hooks:
-            stats.candidate_stats = {}
-        t_start = time.perf_counter()
-        vals: Dict[int, Any] = {}
-        # Pre-compute candidate subgraphs per partition node (for key
-        # evaluation and elision checks).
-        cands_by_pnode: Dict[int, PartitionerCandidate] = {}
-        for s in g.scans:
-            for c in merge(g, search(g, s)):
-                cands_by_pnode[c.origin[1]] = c
-
-        for nid in g.toposort():
-            node = g.nodes[nid]
-            t0 = time.perf_counter()
-            kind = node.kind
-            parents = g.parents(nid)
-
-            if kind == "scan":
-                ds = self.store.read(node.params["dataset"])
-                flat = ds.gather()
-                dev = device_flat_columns(ds) if backend == "device" else None
-                stats.input_bytes += ds.nbytes
-                vals[nid] = TableVal(flat, ds.counts.copy(), ds.partitioner,
-                                     device_columns=dev)
-            elif kind == "partition":
-                vals[nid] = self._exec_partition(g, nid, cands_by_pnode,
-                                                 vals, stats, backend)
-            elif kind == "join":
-                vals[nid] = self._exec_join(vals[parents[0]], vals[parents[1]],
-                                            node.params.get("projection"))
-            elif kind == "aggregate":
-                vals[nid] = self._exec_aggregate(vals[parents[0]], node.params)
-            elif kind == "apply":
-                vals[nid] = self._exec_map(vals[parents[0]], node.params["fn"])
-            elif kind == "flatten":
-                vals[nid] = self._exec_flatten(vals[parents[0]])
-            elif kind == "filter":
-                vals[nid] = self._exec_filter(vals[parents[0]], vals[parents[1]])
-            elif kind == "write":
-                tv: TableVal = vals[parents[0]]
-                cols = {k: v for k, v in tv.columns.items()
-                        if k != "__key__"}
-                self.store.write_layout(node.params["dataset"], cols,
-                                        tv.counts, tv.partitioner,
-                                        device_columns=tv.device_columns)
-                stats.output_bytes += int(sum(v.nbytes for v in cols.values()))
-                vals[nid] = tv
-            else:
-                # lambda nodes: evaluate over parent values (columns/TableVal)
-                fn = resolve_fn(node.label, node.params)
-                args = [vals[p].columns if isinstance(vals[p], TableVal)
-                        else vals[p] for p in parents]
-                vals[nid] = fn(*args)
-            stats.stage_latency[f"{nid}:{node.label}"] = \
-                stats.stage_latency.get(f"{nid}:{node.label}", 0.0) + \
-                (time.perf_counter() - t0)
-
-        stats.wall_s = time.perf_counter() - t_start
-        if history is not None:
-            history.log_workload(
-                workload,
-                timestamp=time.time() if timestamp is None else timestamp,
-                latency=stats.wall_s,
-                input_bytes=float(stats.input_bytes),
-                output_bytes=float(stats.output_bytes),
-                candidate_stats=stats.candidate_stats or {})
-        for hook in self.run_hooks:
-            hook(workload, stats)
+        vals, stats, _plan = plan_and_execute(
+            self.planner, self.executor, workload, backend,
+            history=history, hooks=tuple(self.run_hooks),
+            timestamp=timestamp)
         return vals, stats
-
-    # ------------------------------------------------------- partition node --
-    def _exec_partition(self, g, nid, cands_by_pnode, vals, stats,
-                        backend: str = "host") -> TableVal:
-        """Repartition (or elide) at a partition node.
-
-        The partition key is the *evaluated* parent key-expression — aligned
-        with the current table's rows (works for post-join/flatten keys,
-        where recompiling the root-scan chain would be wrong).  The
-        extracted candidate (when the node is a first-level scan→partition,
-        Alg. 1) drives the Alg. 4 elision check against stored layouts."""
-        cand = cands_by_pnode.get(nid)
-        table: TableVal = _first_table(vals, g, nid)
-        key_parent = g.parents(nid)[0]
-        key_vals = np.asarray(vals[key_parent]).reshape(-1)
-
-        # observation (DESIGN §8): per-candidate runtime stats measured at
-        # this node feed the auto-logged ExecutionRecord
-        if stats.candidate_stats is not None and cand is not None:
-            _record_candidate_stats(stats.candidate_stats,
-                                    cand.signature(), table, key_vals)
-
-        # Alg. 4 elision check against the table's current layout
-        if (cand is not None and self.matching
-                and table.partitioner is not None):
-            t0 = time.perf_counter()
-            dataset = g.nodes[cand.origin[0]].params.get("dataset", "")
-            m = partitioning_match(table.partitioner, dataset, g)
-            stats.match_overhead_s += time.perf_counter() - t0
-            if nid in m.partition_nodes:
-                stats.shuffles_elided += 1
-                out = TableVal(dict(table.columns), table.counts.copy(),
-                               table.partitioner,
-                               device_columns=table.device_columns)
-                out.columns["__key__"] = key_vals
-                return out                   # layout already correct
-
-        # shuffle: hash the key column, re-bucket every column
-        from .ir import _mix_hash
-        strategy = g.nodes[nid].params.get("strategy", "hash")
-        t_sh = time.perf_counter()
-        if backend == "device" and strategy == "hash" and key_vals.size:
-            # DESIGN §5: one jitted plan — fused hash + histogram +
-            # counting-sort permutation + packed gather; upstream device
-            # flats (scan of a device store) feed it without re-upload
-            res = device_rebucket_full(table.columns, key_vals, table.m,
-                                       interpret=self.interpret,
-                                       device_columns=table.device_columns)
-            stats.shuffles_performed += 1
-            stats.device_repartitions += 1
-            stats.shuffle_bytes += int(table.nbytes() * (table.m - 1)
-                                       / table.m)
-            stats.shuffle_s += time.perf_counter() - t_sh
-            return TableVal(res.columns, res.counts,
-                            cand or table.partitioner,
-                            device_columns=res.device_columns)
-        if strategy == "range":
-            lo, hi = key_vals.min(), key_vals.max()
-            width = max((hi - lo) / table.m, 1e-9)
-            pids = np.clip(((key_vals - lo) / width).astype(np.int64),
-                           0, table.m - 1)
-        else:
-            pids = np.asarray(_mix_hash(key_vals)).astype(np.int64) % table.m
-        order = np.argsort(pids, kind="stable")
-        counts = np.bincount(pids, minlength=table.m).astype(np.int64)
-        new_cols = {k: v[order] for k, v in table.columns.items()}
-        new_cols["__key__"] = key_vals[order]
-        stats.shuffles_performed += 1
-        stats.shuffle_bytes += int(table.nbytes() * (table.m - 1) / table.m)
-        stats.shuffle_s += time.perf_counter() - t_sh
-        return TableVal(new_cols, counts, cand or table.partitioner)
-
-    # ------------------------------------------------------------- join node --
-    def _exec_join(self, left: TableVal, right: TableVal,
-                   projection: Optional[Callable]) -> TableVal:
-        out_segments: List[Columns] = []
-        counts = np.zeros(left.m, np.int64)
-        for w in range(left.m):
-            lc, rc = left.worker_slice(w), right.worker_slice(w)
-            lk = lc.pop("__key__")
-            rk = rc.pop("__key__")
-            if lk.size == 0 or rk.size == 0:
-                continue
-            sidx = np.argsort(rk, kind="stable")
-            rk_sorted = rk[sidx]
-            pos = np.searchsorted(rk_sorted, lk)
-            pos = np.clip(pos, 0, rk_sorted.size - 1)
-            hit = rk_sorted[pos] == lk
-            ridx = sidx[pos[hit]]
-            lsel = np.nonzero(hit)[0]
-            seg: Columns = {k: v[lsel] for k, v in lc.items()}
-            for k, v in rc.items():
-                seg[f"r_{k}" if k in seg else k] = v[ridx]
-            if projection is not None:
-                seg = projection(seg)
-            counts[w] = len(lsel)
-            out_segments.append(seg)
-        if out_segments:
-            keys = out_segments[0].keys()
-            cols = {k: np.concatenate([s[k] for s in out_segments])
-                    for k in keys}
-        else:
-            cols = {}
-        return TableVal(cols, counts, left.partitioner)
-
-    # -------------------------------------------------------- aggregate node --
-    def _exec_aggregate(self, table: TableVal, params) -> TableVal:
-        reducer = params.get("reducer", "sum")
-        fn = params.get("fn")
-        if fn is not None:
-            return TableVal(fn(table.columns), np.array([1] * table.m),
-                            table.partitioner)
-        # keyed aggregation: key is the repartition key from the upstream
-        # partition node ("__key__"); values are all other columns
-        out_segs: List[Columns] = []
-        counts = np.zeros(table.m, np.int64)
-        for w in range(table.m):
-            seg = table.worker_slice(w)
-            if not seg or len(next(iter(seg.values()))) == 0:
-                continue
-            key = seg.get("__key__", seg.get("key"))
-            uk, inv = np.unique(key, return_inverse=True)
-            agg: Columns = {"key": uk}
-            for k, v in seg.items():
-                if k in ("key", "__key__"):
-                    continue
-                acc = np.zeros((len(uk),) + v.shape[1:], np.float64)
-                np.add.at(acc, inv, v)
-                if reducer == "mean":
-                    cnt = np.bincount(inv, minlength=len(uk)).astype(np.float64)
-                    acc = acc / cnt.reshape((-1,) + (1,) * (acc.ndim - 1))
-                agg[k] = acc.astype(v.dtype)
-            counts[w] = len(uk)
-            out_segs.append(agg)
-        if out_segs:
-            cols = {k: np.concatenate([s[k] for s in out_segs])
-                    for k in out_segs[0]}
-        else:
-            cols = {}
-        return TableVal(cols, counts, table.partitioner)
-
-    # ------------------------------------------------------------- map/flatten --
-    def _exec_map(self, table: TableVal, fn: Optional[Callable]) -> TableVal:
-        if fn is None:
-            return table
-        return TableVal(fn(table.columns), table.counts.copy(),
-                        table.partitioner)
-
-    def _exec_flatten(self, table: TableVal) -> TableVal:
-        fan = None
-        cols: Columns = {}
-        for k, v in table.columns.items():
-            if v.ndim >= 2:
-                fan = v.shape[1]
-                cols[k] = v.reshape((-1,) + v.shape[2:])
-        if fan is None:
-            return table
-        for k, v in table.columns.items():
-            if v.ndim == 1:
-                cols[k] = np.repeat(v, fan)
-        return TableVal(cols, table.counts * fan, table.partitioner)
-
-    def _exec_filter(self, table: TableVal, pred: np.ndarray) -> TableVal:
-        pred = np.asarray(pred).reshape(-1).astype(bool)
-        o = table.offsets()
-        counts = np.array([int(pred[o[w]:o[w] + table.counts[w]].sum())
-                           for w in range(table.m)], np.int64)
-        cols = {k: v[pred] for k, v in table.columns.items()}
-        return TableVal(cols, counts, table.partitioner)
-
-
-def _record_candidate_stats(out: Dict[str, Dict[str, float]], sig: str,
-                            table: TableVal, key_vals: np.ndarray) -> None:
-    """Measure the ExecutionRecord candidate-stat schema at a partition
-    node.  Two partition nodes in one run can share a (structural)
-    signature; merging mirrors features.py aggregation — max selectivity,
-    min distinct keys — so per-run stats compose like per-group ones."""
-    object_bytes = float(table.nbytes())
-    key_bytes = float(key_vals.nbytes)
-    st = {
-        "selectivity": key_bytes / object_bytes if object_bytes else 0.0,
-        "distinct_keys": float(np.unique(key_vals).size),
-        "num_objects": float(table.num_rows),
-        "key_bytes": key_bytes,
-        "object_bytes": object_bytes,
-    }
-    cur = out.get(sig)
-    if cur is None:
-        out[sig] = st
-        return
-    for k, v in st.items():
-        cur[k] = min(cur[k], v) if k == "distinct_keys" else max(cur[k], v)
-
-
-def _first_table(vals, g, nid):
-    for p in g.parents(nid):
-        v = vals.get(p)
-        if isinstance(v, TableVal):
-            return v
-        sub = _first_table(vals, g, p)
-        if sub is not None:
-            return sub
-    return None

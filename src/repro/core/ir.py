@@ -146,6 +146,7 @@ class IRGraph:
         self._children: Dict[int, List[int]] = {}
         self._parents: Dict[int, List[int]] = {}   # ordered (binop arg order)
         self._next_id = 0
+        self._sig_cache: Optional[str] = None      # memoized graph_signature
 
     # -- construction -------------------------------------------------------
     def add_node(self, label: str, params: Optional[Dict[str, Any]] = None) -> int:
@@ -154,6 +155,7 @@ class IRGraph:
         self.nodes[nid] = Node(nid, label, dict(params or {}))
         self._children[nid] = []
         self._parents[nid] = []
+        self._sig_cache = None
         return nid
 
     def add_edge(self, src: int, dst: int) -> None:
@@ -161,6 +163,7 @@ class IRGraph:
             raise KeyError(f"edge ({src},{dst}) references unknown node")
         self._children[src].append(dst)
         self._parents[dst].append(src)
+        self._sig_cache = None
 
     # -- accessors -----------------------------------------------------------
     def children(self, nid: int) -> List[int]:
@@ -253,7 +256,14 @@ class IRGraph:
         non-write leaves (e.g. a partition branch that feeds no write) so
         two workloads differing only in such a branch never collide — a
         strict refinement (identical to the paper whenever writes are the
-        only leaves)."""
+        only leaves).
+
+        Memoized until the graph structure changes (``add_node`` /
+        ``add_edge`` invalidate): the signature keys the Session's
+        PhysicalPlan cache, so repeated runs of a frozen workload must not
+        pay the path enumeration again."""
+        if self._sig_cache is not None:
+            return self._sig_cache
         sigs: List[str] = []
         leaves = self.leaves()
         for s in self.scans:
@@ -262,6 +272,7 @@ class IRGraph:
                     continue
                 sigs.extend(self.path_signature(p) for p in self.all_paths(s, o))
         digest = hashlib.sha256("|".join(sorted(set(sigs))).encode()).hexdigest()
+        self._sig_cache = digest
         return digest
 
     # -- two-terminal property -------------------------------------------------

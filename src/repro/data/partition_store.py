@@ -36,7 +36,16 @@ from .device_repartition import (device_repartition_dataset,
 
 Columns = Dict[str, np.ndarray]
 
+#: kept for backward compatibility; the authoritative list lives in the
+#: BackendRegistry (repro.core.backends.REGISTRY)
 BACKENDS = ("host", "device")
+
+
+class RetiredGenerationError(KeyError):
+    """A specific, still-retained generation was requested but has left
+    the bounded retention window (``max_retired_generations``).  Distinct
+    from a plain ``KeyError`` (unknown dataset name) so callers that pin
+    generations — the planner — can retry on exactly this condition."""
 
 # one vectorized counting-sort placement shared by all columns, replacing
 # the per-worker Python copy loop (lives in device_repartition so the
@@ -114,11 +123,18 @@ class StoredDataset:
 class PartitionStore:
     def __init__(self, num_workers: int = 8, backend: str = "host",
                  interpret: Optional[bool] = None,
-                 max_retired_generations: int = 2):
-        if backend not in BACKENDS:
-            raise ValueError(f"backend must be one of {BACKENDS}")
+                 max_retired_generations: int = 2,
+                 registry=None):
+        from ..core.backends import resolve_backend
         self.m = num_workers
-        self.backend = backend
+        # UnknownBackendError on typos; `registry` (default: the global
+        # one) lets a Session thread its own registry through, so custom
+        # backends registered there resolve here too
+        b = resolve_backend(backend, registry)
+        self.backend = b.name
+        # capability, not name: a registered custom backend with
+        # device_resident=True gets device-resident columns too
+        self._device_resident = b.device_resident
         self.interpret = interpret      # None → auto (interpret off-TPU)
         self.datasets: Dict[str, StoredDataset] = {}
         self.write_log: List[Dict[str, Any]] = []
@@ -160,7 +176,7 @@ class PartitionStore:
         if partitioner is None:
             partitioner = PartitionerCandidate(graph=None, strategy=ROUND_ROBIN)
 
-        if self.backend == "device":
+        if self._device_resident:
             columns, counts = self._dispatch_device(data, partitioner, n, seed)
         else:
             columns, counts = self._dispatch_host(data, partitioner, n, seed)
@@ -234,7 +250,7 @@ class PartitionStore:
         counts = np.asarray(counts, np.int64)
         n = int(counts.sum())
         cap = int(counts.max()) if n else 1
-        if self.backend == "device":
+        if self._device_resident:
             # rows are already segmented per worker ⇒ pids are implied
             pids = np.repeat(np.arange(self.m, dtype=np.int32), counts)
             columns = device_scatter_padded(flat_columns, pids, counts,
@@ -265,9 +281,10 @@ class PartitionStore:
         for old in reversed(self._retired.get(name, [])):
             if old.generation == generation:
                 return old
-        raise KeyError(f"{name}@gen{generation} not found "
-                       f"(current gen {ds.generation}, retains last "
-                       f"{self.max_retired_generations})")
+        raise RetiredGenerationError(
+            f"{name}@gen{generation} not found "
+            f"(current gen {ds.generation}, retains last "
+            f"{self.max_retired_generations})")
 
     def stored_partitioners(self) -> Dict[str, Optional[PartitionerCandidate]]:
         return {n: d.partitioner for n, d in self.datasets.items()}
@@ -298,7 +315,9 @@ class PartitionStore:
         t0 = time.perf_counter()
         moved = int(ds.nbytes * (self.m - 1) / self.m)
         name = name or (ds.name if swap else ds.name + "@reparted")
-        if (self.backend == "device" and ds.backend == "device"
+        if mesh is not None:
+            from ..core.sharding_bridge import device_put_dataset
+        if (self._device_resident and ds.backend == "device"
                 and partitioner.strategy == HASH
                 and partitioner.graph is not None):
             columns, counts = device_repartition_dataset(
@@ -308,7 +327,6 @@ class PartitionStore:
                                 num_rows=int(counts.sum()),
                                 nbytes=ds.nbytes)
             if mesh is not None:
-                from ..core.sharding_bridge import device_put_dataset
                 new = device_put_dataset(mesh, new)
             self._install(name, new)
             self.write_log.append({
@@ -322,7 +340,6 @@ class PartitionStore:
             flat = ds.gather()
             new = self.write(name, flat, partitioner)
             if mesh is not None:
-                from ..core.sharding_bridge import device_put_dataset
                 # same generation, mesh-placed columns — re-publish only if
                 # no newer generation landed while we were placing (CAS)
                 new = device_put_dataset(mesh, new)

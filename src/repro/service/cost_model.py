@@ -9,8 +9,9 @@ Benefit side — for every skeleton group in history whose IR scans D, Alg. 4
 nodes that layout c would elide versus the count the *current* layout
 already elides; the delta, times the group's run rate inside the recency
 window, times the modeled per-shuffle seconds, is the benefit rate.  Using
-the exact matcher means the model never predicts an elision the engine
-won't actually perform.
+the exact matcher means the model never predicts an elision the planner
+won't actually compile into the PhysicalPlan (DESIGN §9: the same Alg. 4
+check runs statically at plan time).
 
 Cost side — one full repartition of D's bytes.
 
@@ -147,7 +148,8 @@ class WhatIfCostModel:
     def elisions_per_run(candidate: Optional[PartitionerCandidate],
                          dataset: str, ir) -> int:
         """Partition nodes of one consumer IR that layout `candidate` lets
-        the engine elide — the exact Alg. 4 check the engine itself runs."""
+        the planner elide — the exact Alg. 4 check the planner compiles
+        into the PhysicalPlan at plan time."""
         if candidate is None or not candidate.is_keyed:
             return 0
         return len(partitioning_match(candidate, dataset, ir).partition_nodes)

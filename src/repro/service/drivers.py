@@ -22,8 +22,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..api import Session
 from ..core.dsl import Workload
-from ..core.engine import Engine, EngineStats
+from ..core.executor import EngineStats
 from ..data.partition_store import PartitionStore
 from .observer import LogicalClock
 from .optimizer import Autopilot, AutopilotConfig, TickReport
@@ -113,7 +114,7 @@ class RunSummary:
 @dataclass
 class DriftScenarioReport:
     store: PartitionStore
-    engine: Engine
+    session: Session
     autopilot: Autopilot
     phase_a: List[RunSummary] = field(default_factory=list)
     tick_a: Optional[TickReport] = None
@@ -155,11 +156,11 @@ def run_drift_scenario(*, backend: str = "host", num_workers: int = 8,
     store = PartitionStore(num_workers=num_workers, backend=backend)
     for name, data in tables.items():
         store.write(name, data)                       # round-robin seed
-    engine = Engine(store, backend=backend)
-    ap = Autopilot(engine, clock=LogicalClock(),
-                   config=config or default_drift_config(),
-                   selector=selector)
-    rep = DriftScenarioReport(store=store, engine=engine, autopilot=ap)
+    session = Session(store, backend=backend)
+    ap = session.autopilot(clock=LogicalClock(),
+                           config=config or default_drift_config(),
+                           selector=selector)
+    rep = DriftScenarioReport(store=store, session=session, autopilot=ap)
 
     def snap_lineitem():
         ds = store.read("lineitem")
@@ -172,13 +173,13 @@ def run_drift_scenario(*, backend: str = "host", num_workers: int = 8,
 
     # phase A: orderkey mix — every run observed, shuffles paid
     for i in range(phase_a_runs):
-        vals, stats = engine.run(wl_a)
+        vals, stats = session.run(wl_a)
         rep.phase_a.append(RunSummary.of(stats))
         if i == 0:
             rep.result_pre_a = aggregate_result(vals, wl_a)
     rep.tick_a = ap.tick()                            # decide + apply + swap
     snap_lineitem()
-    vals, stats = engine.run(wl_a)                    # post-decision run
+    vals, stats = session.run(wl_a)                    # post-decision run
     rep.post_a = RunSummary.of(stats)
     rep.result_post_a = aggregate_result(vals, wl_a)
 
@@ -186,7 +187,7 @@ def run_drift_scenario(*, backend: str = "host", num_workers: int = 8,
     # lineitem/orders' post-swap cooldown, so it cannot flip them yet (the
     # flip-flop guard); `part` — new traffic, no cooldown — may be acted on.
     for i in range(phase_b_runs):
-        vals, stats = engine.run(wl_b)
+        vals, stats = session.run(wl_b)
         rep.phase_b.append(RunSummary.of(stats))
         if i == 0:
             rep.result_pre_b = aggregate_result(vals, wl_b)
@@ -194,7 +195,7 @@ def run_drift_scenario(*, backend: str = "host", num_workers: int = 8,
             rep.tick_b_mid = ap.tick()
     rep.tick_b = ap.tick()                            # re-partition on drift
     snap_lineitem()
-    vals, stats = engine.run(wl_b)
+    vals, stats = session.run(wl_b)
     rep.post_b = RunSummary.of(stats)
     rep.result_post_b = aggregate_result(vals, wl_b)
     return rep

@@ -1,11 +1,14 @@
 """Observer — the "observe" third of the Autopilot loop (DESIGN §8).
 
-Attaches to :class:`~repro.core.engine.Engine` run hooks and turns every
-execution into durable signal: an :class:`~repro.core.history.
+Attaches to run hooks — of a :class:`~repro.api.Session` or the legacy
+:class:`~repro.core.engine.Engine` shim — and turns every execution into
+durable signal: an :class:`~repro.core.history.
 ExecutionRecord` appended to the :class:`~repro.core.history.HistoryStore`
 (latency, input/output bytes, per-candidate selectivity/distinct-key stats
 measured at each partition node), plus live shuffle-throughput samples fed
 to the :class:`~repro.service.cost_model.WhatIfCostModel` calibration.
+The measurement pass at partition nodes only runs while an observer (or
+any other hook/history) is attached; unobserved runs skip it.
 
 Timestamps come from a pluggable clock.  Production uses ``time.time``;
 tests and the drift scenarios use :class:`LogicalClock` so the recency
@@ -17,7 +20,7 @@ from __future__ import annotations
 import time
 from typing import Callable, Optional
 
-from ..core.engine import Engine, EngineStats
+from ..core.executor import EngineStats
 from ..core.history import ExecutionRecord, HistoryStore
 
 
@@ -40,7 +43,7 @@ class LogicalClock:
 
 
 class Observer:
-    """Auto-appends an ExecutionRecord per observed Engine.run.
+    """Auto-appends an ExecutionRecord per observed Session/Engine run.
 
     ``attach(engine)`` registers a run hook; from then on every run of that
     engine is recorded with this observer's clock — no hand-built records.
@@ -66,17 +69,27 @@ class Observer:
         self.records_seen = 0
         self.compacted_total = 0
 
-    def attach(self, engine: Engine) -> "Observer":
-        engine.add_run_hook(self.on_run)
+    def attach(self, session) -> "Observer":
+        """Register on anything with ``add_run_hook`` (Session or the
+        legacy Engine shim)."""
+        session.add_run_hook(self.on_run)
         return self
 
     # -- the hook -----------------------------------------------------------
     def on_run(self, workload, stats: EngineStats) -> ExecutionRecord:
-        rec = self.history.log_workload(
-            workload, timestamp=self.clock(), latency=stats.wall_s,
-            input_bytes=float(stats.input_bytes),
-            output_bytes=float(stats.output_bytes),
-            candidate_stats=dict(stats.candidate_stats or {}))
+        # per-run dedupe: when THIS run's executor already appended its
+        # record to this exact HistoryStore (session/engine constructed
+        # with history=..., or run(history=...) passed explicitly), adopt
+        # that record instead of logging a duplicate — double records
+        # would double the run rates the cost model prices from
+        if stats.history_logged is self.history and self.history.records:
+            rec = self.history.records[-1]      # the executor's append
+        else:
+            rec = self.history.log_workload(
+                workload, timestamp=self.clock(), latency=stats.wall_s,
+                input_bytes=float(stats.input_bytes),
+                output_bytes=float(stats.output_bytes),
+                candidate_stats=dict(stats.candidate_stats or {}))
         self.records_seen += 1
         if self.cost_model is not None and stats.shuffle_bytes \
                 and stats.shuffle_s > 0:

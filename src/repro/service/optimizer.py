@@ -220,16 +220,26 @@ class StorageOptimizer:
 
 
 class Autopilot:
-    """Facade wiring the whole subsystem to one engine: Observer (history +
-    throughput calibration) + WhatIfCostModel + StorageOptimizer.
+    """Facade wiring the whole subsystem to one execution surface:
+    Observer (history + throughput calibration) + WhatIfCostModel +
+    StorageOptimizer.
 
-        eng = Engine(store)
-        ap = Autopilot(eng, clock=LogicalClock())
-        eng.run(workload)          # observed automatically
+    Attaches to anything exposing ``.store`` and ``.add_run_hook`` — a
+    :class:`~repro.api.Session` (``session.autopilot()`` is the idiomatic
+    spelling) or the legacy Engine shim::
+
+        sess = Session(store)
+        ap = sess.autopilot(clock=LogicalClock())
+        sess.run(workload)         # observed automatically
         ap.tick()                  # decide + apply + swap generations
+
+    Every applied decision publishes a new layout generation, which by
+    construction invalidates exactly the cached PhysicalPlans that scan
+    the repartitioned dataset (their cache key pins the generation) — the
+    session re-plans on its next run and picks up the elisions.
     """
 
-    def __init__(self, engine, *, clock: Optional[Callable[[], float]] = None,
+    def __init__(self, session, *, clock: Optional[Callable[[], float]] = None,
                  config: Optional[AutopilotConfig] = None,
                  selector=None, history: Optional[HistoryStore] = None,
                  bench_path: Optional[str] = None, mesh=None):
@@ -239,11 +249,12 @@ class Autopilot:
         self.observer = Observer(
             self.history, clock=clock, cost_model=self.cost_model,
             max_records=(config.max_history_records if config else None))
-        self.observer.attach(engine)
+        self.observer.attach(session)
         self.optimizer = StorageOptimizer(
-            engine.store, self.history, cost_model=self.cost_model,
+            session.store, self.history, cost_model=self.cost_model,
             selector=selector, config=config, mesh=mesh, clock=clock)
-        self.engine = engine
+        self.session = session
+        self.engine = session          # pre-split alias
 
     def tick(self) -> TickReport:
         return self.optimizer.tick()
