@@ -1,0 +1,144 @@
+"""Durable storage tier benchmarks (DESIGN §10).
+
+Four rows per scale:
+
+* ``storage_flush`` — persisting one generation (segment writes + manifest
+  publish), the durability tax each autoflushed write pays;
+* ``storage_cold_open`` — a FRESH process attaching to the store and doing
+  its first full scan: manifest load + zero-copy memmap + page-in;
+* ``storage_warm_scan`` — the same scan once the page cache is hot, the
+  steady-state read path a reopened application actually sees;
+* ``storage_spill_rerun`` — scans under a memory budget that forces the
+  eviction loop to spill between reads, i.e. the cost of a dataset that
+  does not fit in RAM.
+
+Plus the headline ``storage_reopen_elide`` row: a second Session on the
+same store runs the consumer workload against the layout the first session
+paid for — shuffle count and bytes must be zero (paper §1: layouts reused
+"across applications").
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.api import Session
+from repro.core import Workload, enumerate_candidates
+from repro.data.partition_store import PartitionStore
+
+from .common import emit, scale
+
+
+def _dataset(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.integers(0, max(n // 16, 4), size=n).astype(np.int64),
+            "a": rng.standard_normal(n).astype(np.float32),
+            "b": rng.integers(0, 1 << 30, size=n).astype(np.int32)}
+
+
+def _keyed(dataset="events"):
+    wl = Workload("w")
+    t = wl.scan(dataset)
+    wl.partition(t["k"])
+    return enumerate_candidates(wl.graph, dataset)[0]
+
+
+def _consumer():
+    wl = Workload("storage-consumer")
+    t = wl.scan("events")
+    p = wl.partition(t["k"])
+    wl.aggregate(p, reducer="sum")
+    return wl
+
+
+def _time(fn, repeats=3):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_persistence(n: int, m: int = 8) -> None:
+    data = _dataset(n)
+    nbytes = sum(v.nbytes for v in data.values())
+    root = tempfile.mkdtemp(prefix="lachesis-bench-store-")
+    try:
+        store = PartitionStore(num_workers=m, root=root, autoflush=False)
+        store.write("events", data, _keyed())
+
+        t_flush, _ = _time(lambda: (store._dirty.add("events"),
+                                    store.flush("events"))[-1])
+        emit(f"storage_flush_n{n}_m{m}", t_flush * 1e6,
+             f"bytes={nbytes} GBps={nbytes / t_flush / 1e9:.2f}")
+
+        def cold_open():
+            s = PartitionStore.open(root)       # fresh attach: manifests only
+            return s.read("events").gather()["a"].sum()
+        t_cold, _ = _time(cold_open, repeats=1)
+        emit(f"storage_cold_open_n{n}_m{m}", t_cold * 1e6,
+             f"bytes={nbytes} GBps={nbytes / t_cold / 1e9:.2f}")
+
+        warm = PartitionStore.open(root)
+        warm.read("events").gather()            # fault every page in
+        t_warm, _ = _time(
+            lambda: warm.read("events").gather()["a"].sum())
+        emit(f"storage_warm_scan_n{n}_m{m}", t_warm * 1e6,
+             f"bytes={nbytes} GBps={nbytes / t_warm / 1e9:.2f}")
+
+        # spill pressure: budget below one dataset ⇒ every write re-spills,
+        # every scan reads through disk-backed views
+        tight = PartitionStore(num_workers=m, root=root + "-tight",
+                               memory_budget_bytes=nbytes // 2)
+        tight.write("events", data, _keyed())
+        assert tight.is_spilled("events")
+        t_spill, _ = _time(
+            lambda: tight.read("events").gather()["a"].sum())
+        io = tight.io_snapshot()
+        emit(f"storage_spill_rerun_n{n}_m{m}", t_spill * 1e6,
+             f"bytes={nbytes} spills={int(io['spills'])} "
+             f"vs_warm={t_spill / max(t_warm, 1e-9):.2f}x")
+        shutil.rmtree(root + "-tight", ignore_errors=True)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def bench_reopen_elide(n: int, m: int = 8) -> None:
+    """Process-A-pays, process-B-rides: the second Session's consumer run
+    must perform zero shuffles against the persisted layout."""
+    root = tempfile.mkdtemp(prefix="lachesis-bench-reuse-")
+    try:
+        a = Session(store_path=root, num_workers=m)
+        data = _dataset(n)
+        del data["b"]            # keyed agg over int32 sums would overflow
+        a.write("events", data, _keyed())
+        res_a = a.run(_consumer())
+        assert res_a.stats.shuffles_elided == 1
+
+        def reopen_run():
+            b = Session(store_path=root)
+            return b.run(_consumer())
+        t_b, res_b = _time(reopen_run, repeats=2)
+        assert res_b.stats.shuffles_performed == 0
+        assert res_b.stats.shuffle_bytes == 0
+        emit(f"storage_reopen_elide_n{n}_m{m}", t_b * 1e6,
+             f"elided={res_b.stats.shuffles_elided} shuffle_bytes=0 "
+             f"cold_session_wall_s={t_b:.4f}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def main() -> None:
+    n = scale(1_000_000, 100_000)
+    bench_persistence(n)
+    bench_reopen_elide(scale(300_000, 50_000))
+
+
+if __name__ == "__main__":
+    main()

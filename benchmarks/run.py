@@ -19,7 +19,8 @@ import traceback
 def main() -> None:
     from . import (bench_reddit, bench_pagerank, bench_linear_algebra,
                    bench_tpch, bench_overhead, bench_drl_training,
-                   bench_history, bench_kernels, bench_autopilot)
+                   bench_history, bench_kernels, bench_autopilot,
+                   bench_storage)
     argv = sys.argv[1:]
     json_path = None
     if "--json" in argv:
@@ -37,6 +38,7 @@ def main() -> None:
         ("history(Fig13)", bench_history.main),
         ("kernels(Pallas)", bench_kernels.main),
         ("autopilot(service)", bench_autopilot.main),
+        ("storage(durable)", bench_storage.main),
     ]
     from .common import ROWS
     print("name,us_per_call,derived")

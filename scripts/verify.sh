@@ -6,6 +6,11 @@
 #
 # Usage: scripts/verify.sh [--bench [BENCH_tag.json]] [extra pytest args]
 #
+#   (always) after the tests, the cross-process persistence smoke runs
+#             against a tmpdir store (scripts/persistence_smoke.py):
+#             write + Autopilot layout in process A, reopen + shuffle
+#             elision + bit-identical results in process B.
+#
 #   --bench   after the tests, run the benchmark suite in smoke mode
 #             (LACHESIS_BENCH_SMOKE=1: synthetic inputs shrunk to CI size;
 #             the headline device-repartition rows keep their full N so the
@@ -42,6 +47,17 @@ fi
 
 JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q "$@"
+
+# Durable storage tier (DESIGN §10): run the cross-process persistence
+# smoke against a throwaway tmpdir store — process A writes + lets the
+# Autopilot pick the layout, process B (a fresh interpreter) reopens and
+# must elide its shuffle with bit-identical results.
+SMOKE_STORE="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_STORE"' EXIT
+JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python scripts/persistence_smoke.py write "$SMOKE_STORE"
+JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python scripts/persistence_smoke.py reopen "$SMOKE_STORE"
 
 if [[ "$RUN_BENCH" == 1 ]]; then
     echo "== bench smoke → $BENCH_JSON"

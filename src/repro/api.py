@@ -92,16 +92,30 @@ class Session:
                  matching: bool = True, interpret: Optional[bool] = None,
                  net_bandwidth: float = 1.25e9,
                  history=None, registry: Optional[BackendRegistry] = None,
-                 plan_cache_capacity: int = 128):
+                 plan_cache_capacity: int = 128,
+                 store_path: Optional[str] = None,
+                 memory_budget_bytes: Optional[int] = None,
+                 autoflush: bool = True):
+        """``store_path`` (DESIGN §10) backs the session's store with the
+        durable tier: an existing store directory is reattached (its
+        layouts, partitioner signatures and generation numbers carry over,
+        so this session's plans elide the shuffles a previous application's
+        layouts paid for), a fresh directory is initialized.  Mutually
+        exclusive with passing a ``store`` object."""
         self.registry = registry or REGISTRY
         self._backend: Backend = self.registry.get(backend)
+        if store is not None and store_path is not None:
+            raise ValueError("pass either store= or store_path=, not both")
         if store is None:
             store = PartitionStore(num_workers=num_workers,
                                    backend=self._backend.name
                                    if self._backend.device_resident
                                    else "host",
                                    interpret=interpret,
-                                   registry=self.registry)
+                                   registry=self.registry,
+                                   root=store_path,
+                                   memory_budget_bytes=memory_budget_bytes,
+                                   autoflush=autoflush)
         self.net_bandwidth = net_bandwidth
         self.history = history
         self.run_hooks: List[Callable[[Any, EngineStats], None]] = []
@@ -265,6 +279,15 @@ class Session:
         affected cached plans miss on their next lookup)."""
         ds = self.store.read(name)
         return self.store.repartition(ds, partitioner, mesh=mesh, swap=swap)
+
+    def flush(self, name: Optional[str] = None) -> int:
+        """Persist pending generations to the durable tier (no-op without
+        ``store_path``).  Returns the number of generations published."""
+        return self.store.flush(name)
+
+    @property
+    def store_path(self) -> Optional[str]:
+        return self.store.root if self.store.is_durable else None
 
     # -- service attach --------------------------------------------------------
     def autopilot(self, **kw):

@@ -91,6 +91,13 @@ class EngineStats:
     planning_s: float = 0.0          # plan/compile wall for this run (0 on hit)
     plan_cache_hit: Optional[bool] = None   # None when run outside a Session
     candidate_measure_passes: int = 0       # measurement-pass executions
+    # durable-tier I/O this run caused (DESIGN §10): segment bytes written
+    # (autoflushed generations) + read (spill rehydration), and the wall
+    # spent on them — the Observer feeds these into the cost model's I/O
+    # calibration; zeros on a memory-only store
+    storage_io_bytes: int = 0
+    storage_io_s: float = 0.0
+    storage_rehydrations: int = 0
     # the HistoryStore this run's executor appended its record to (None if
     # unobserved) — lets the Observer hook skip a duplicate append when it
     # shares that exact store
@@ -151,6 +158,8 @@ class Executor:
                         f"{step.dataset}@gen{step.generation} but the store "
                         f"now holds gen{ds.generation}; re-plan (Session.run "
                         "re-keys the plan cache automatically)")
+        io0 = self.store.io_snapshot() if hasattr(self.store,
+                                                  "io_snapshot") else {}
         t_start = time.perf_counter()
         vals: Dict[int, Any] = {}
 
@@ -208,6 +217,15 @@ class Executor:
                 (time.perf_counter() - t0)
 
         stats.wall_s = time.perf_counter() - t_start
+        if io0:
+            io1 = self.store.io_snapshot()
+            stats.storage_io_bytes = int(
+                io1["bytes_written"] - io0["bytes_written"]
+                + io1["bytes_read"] - io0["bytes_read"])
+            stats.storage_io_s = float(io1["write_s"] - io0["write_s"]
+                                       + io1["read_s"] - io0["read_s"])
+            stats.storage_rehydrations = int(io1["rehydrations"]
+                                             - io0["rehydrations"])
         if history is not None:
             stats.history_logged = history
             history.log_workload(

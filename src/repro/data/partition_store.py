@@ -16,6 +16,16 @@ loop); ``backend="device"`` holds columns device-resident (jnp) behind the
 same ``(m, capacity)`` layout, dispatching through the cached single-pass
 shuffle plans (hash → counting-sort → packed scatter) and repartitioning
 device-to-device when the source dataset is device-backed.
+
+Durability (DESIGN §10): pass ``root=`` to back the store with the
+:mod:`~repro.data.storage` tier — every published generation is written as
+per-column segment files (already in the padded layout, so reopening is a
+zero-copy ``np.memmap``) under a crash-safe manifest; a fresh process
+reattaches with :meth:`PartitionStore.open` (or
+``lachesis.Session(store_path=...)``) and consumers elide their shuffles
+against layouts a previous application paid for.  ``memory_budget_bytes``
+turns on the eviction loop: cold datasets spill to their segments, reads
+lazily rehydrate, and a device-resident store prefetches host→device.
 """
 
 from __future__ import annotations
@@ -25,12 +35,13 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+import jax
 import numpy as np
 
 from ..core.partitioner import (HASH, PartitionerCandidate, RANDOM,
                                 ROUND_ROBIN)
 from .device_repartition import (device_repartition_dataset,
-                                 device_scatter_padded,
+                                 device_scatter_padded, dtype_roundtrips,
                                  host_counting_sort_dest, shuffle_pids)
 
 
@@ -39,6 +50,10 @@ Columns = Dict[str, np.ndarray]
 #: kept for backward compatibility; the authoritative list lives in the
 #: BackendRegistry (repro.core.backends.REGISTRY)
 BACKENDS = ("host", "device")
+
+#: write_log entries retained verbatim; older entries fold into the
+#: monotone ``write_totals`` aggregates (satellite of DESIGN §10)
+DEFAULT_WRITE_LOG_CAP = 256
 
 
 class RetiredGenerationError(KeyError):
@@ -71,7 +86,11 @@ class StoredDataset:
     change installs a NEW StoredDataset and atomically flips the store's
     name → generation pointer (DESIGN §8).  A reader holding this object
     therefore always sees one consistent generation, never a half-shuffled
-    table, even while a background repartition swaps the pointer."""
+    table, even while a background repartition swaps the pointer.
+
+    (The eviction loop may swap a column's *container* — in-RAM ndarray ⇄
+    read-only memmap of its persisted segment — which is bit-identical by
+    construction, so the immutable-values contract holds for readers.)"""
     name: str
     columns: Columns                   # each (m, capacity, ...)
     counts: np.ndarray                 # (m,) valid rows per worker
@@ -97,17 +116,31 @@ class StoredDataset:
     @property
     def backend(self) -> str:
         """"device" when any column is device-resident (a jax array)."""
-        import jax
         return "device" if any(isinstance(v, jax.Array)
                                for v in self.columns.values()) else "host"
 
+    @property
+    def spilled(self) -> bool:
+        """True when every column is a disk-backed memmap view (the
+        eviction loop's cold state — reads page in lazily).  Zero-size
+        columns hold no memory and cannot be memmapped, so they don't
+        count against the cold state."""
+        cols = [v for v in self.columns.values() if v.size]
+        return bool(self.columns) and all(isinstance(v, np.memmap)
+                                          for v in cols)
+
     def gather(self) -> Columns:
-        """Materialize back to flat rows (host-side, used by shuffles)."""
+        """Materialize back to flat rows (host-side, used by shuffles):
+        one boolean-mask take over the padded layout per column — the
+        row-major (worker-major) mask reproduces the per-worker
+        concatenation order exactly."""
+        counts = np.asarray(self.counts)
+        m, cap = self.num_workers, self.capacity
+        mask = (np.arange(cap) < counts[:, None]).reshape(-1)
         out: Columns = {}
         for k, v in self.columns.items():
             v = np.asarray(v)
-            parts = [v[w, :self.counts[w]] for w in range(self.num_workers)]
-            out[k] = np.concatenate(parts, axis=0)
+            out[k] = v.reshape((m * cap,) + v.shape[2:])[mask]
         return out
 
     def to_host(self) -> "StoredDataset":
@@ -124,9 +157,12 @@ class PartitionStore:
     def __init__(self, num_workers: int = 8, backend: str = "host",
                  interpret: Optional[bool] = None,
                  max_retired_generations: int = 2,
-                 registry=None):
+                 registry=None,
+                 root: Optional[str] = None,
+                 memory_budget_bytes: Optional[int] = None,
+                 autoflush: bool = True,
+                 write_log_cap: int = DEFAULT_WRITE_LOG_CAP):
         from ..core.backends import resolve_backend
-        self.m = num_workers
         # UnknownBackendError on typos; `registry` (default: the global
         # one) lets a Session thread its own registry through, so custom
         # backends registered there resolve here too
@@ -135,36 +171,269 @@ class PartitionStore:
         # capability, not name: a registered custom backend with
         # device_resident=True gets device-resident columns too
         self._device_resident = b.device_resident
+        self._storage_prefetch = b.storage_prefetch
         self.interpret = interpret      # None → auto (interpret off-TPU)
         self.datasets: Dict[str, StoredDataset] = {}
         self.write_log: List[Dict[str, Any]] = []
+        self.write_log_cap = int(write_log_cap)
+        #: monotone aggregates over ALL writes (including entries evicted
+        #: from the bounded write_log) — benchmarks read these
+        self.write_totals: Dict[str, float] = {
+            "entries": 0, "rows": 0, "bytes": 0, "latency_s": 0.0,
+            "evicted": 0}
         # generation machinery (DESIGN §8): `datasets` maps each name to its
         # CURRENT generation; superseded generations are retained (bounded)
         # so in-flight readers and audits can still resolve them by number.
         self.max_retired_generations = max_retired_generations
         self._retired: Dict[str, List[StoredDataset]] = {}
         self._swap_lock = threading.Lock()
+        self._install_locks: Dict[str, threading.Lock] = {}
+        # durable tier (DESIGN §10)
+        self.autoflush = autoflush
+        self.memory_budget_bytes = memory_budget_bytes
+        self._dirty: set = set()
+        self._last_access: Dict[str, int] = {}
+        self._access_clock = 0
+        self.durable = None
+        if root is not None:
+            from .storage.durable import DurableStore
+            self.durable = DurableStore(
+                root, num_workers=num_workers,
+                max_retired_generations=max_retired_generations)
+            # an existing catalog is authoritative for the worker count —
+            # segment layouts are (m, capacity) and cannot be re-bucketed
+            # on open without a shuffle
+            if self.durable.num_workers is not None:
+                num_workers = self.durable.num_workers
+            self._attach()
+        self.m = num_workers
+
+    @classmethod
+    def open(cls, root: str, **kwargs) -> "PartitionStore":
+        """Reattach to a durable store directory written by a previous
+        process.  Worker count and dataset layouts come from the on-disk
+        catalog; ``backend=`` etc. are this process's choices."""
+        return cls(root=root, **kwargs)
+
+    @property
+    def is_durable(self) -> bool:
+        return self.durable is not None
+
+    @property
+    def root(self) -> Optional[str]:
+        return self.durable.root if self.durable is not None else None
+
+    def _attach(self) -> None:
+        """Load every dataset's newest consistent generation as memmap
+        views (zero-copy; nothing is paged in until first touch)."""
+        for name, ds in self.durable.load_all().items():
+            self.datasets[name] = ds
+
+    def _log_write(self, entry: Dict[str, Any]) -> None:
+        """Append a write_log row, folding overflow into the monotone
+        aggregates so the log stays bounded under sustained traffic."""
+        self.write_log.append(entry)
+        t = self.write_totals
+        t["entries"] += 1
+        t["rows"] += int(entry.get("rows", 0))
+        t["bytes"] += int(entry.get("bytes", 0))
+        t["latency_s"] += float(entry.get("latency", 0.0))
+        while len(self.write_log) > self.write_log_cap:
+            self.write_log.pop(0)
+            t["evicted"] += 1
+
+    def write_stats(self) -> Dict[str, float]:
+        """Cumulative write counters (monotone across write_log eviction)."""
+        return dict(self.write_totals)
+
+    def _name_lock(self, name: str) -> threading.Lock:
+        with self._swap_lock:
+            return self._install_locks.setdefault(name, threading.Lock())
 
     def _install(self, name: str, ds: StoredDataset) -> StoredDataset:
         """Atomically make ``ds`` the current generation of ``name``.
 
-        The flip is a single dict assignment under a lock; readers that
-        already hold the previous StoredDataset keep reading it unchanged
-        (generations are immutable)."""
-        with self._swap_lock:
+        The flip is a single dict assignment under the (global) swap lock;
+        readers that already hold the previous StoredDataset keep reading
+        it unchanged (generations are immutable).  On a durable store with
+        autoflush the generation is persisted (segments → manifest →
+        CURRENT) *before* the in-memory flip, so the disk pointer never
+        runs ahead of a generation that fully exists.  The fsync-bound
+        persist runs under a per-NAME lock only (it serializes the
+        generation sequence of this dataset), so a slow background
+        repartition of one dataset never blocks writers of another."""
+        with self._name_lock(name):
             prev = self.datasets.get(name)
             if prev is not None:
                 ds.generation = prev.generation + 1
-                retired = self._retired.setdefault(name, [])
-                retired.append(prev)
-                if len(retired) > self.max_retired_generations:
-                    del retired[:len(retired)
-                                - self.max_retired_generations]
-            self.datasets[name] = ds
+            if self.durable is not None:
+                if self.autoflush:
+                    self.durable.persist(ds)
+                    self._dirty.discard(name)
+                else:
+                    self._dirty.add(name)
+            with self._swap_lock:
+                if prev is not None:
+                    retired = self._retired.setdefault(name, [])
+                    retired.append(prev)
+                    if len(retired) > self.max_retired_generations:
+                        del retired[:len(retired)
+                                    - self.max_retired_generations]
+                self.datasets[name] = ds
+        self._touch(name)
+        self._maybe_evict()
         return ds
 
     def generation_of(self, name: str) -> int:
         return self.datasets[name].generation
+
+    # -- durability (DESIGN §10) ---------------------------------------------
+    def flush(self, name: Optional[str] = None) -> int:
+        """Persist pending generations to the durable tier (all datasets,
+        or just ``name``).  Returns the number of generations published.
+        No-op (0) on a memory-only store."""
+        if self.durable is None:
+            return 0
+        names = [name] if name is not None else sorted(self.datasets)
+        published = 0
+        for n in names:
+            ds = self.datasets[n]
+            if n in self._dirty or not self.durable.has_generation(
+                    n, ds.generation):
+                self.durable.persist(ds)
+                self._dirty.discard(n)
+                published += 1
+        return published
+
+    def io_snapshot(self) -> Dict[str, float]:
+        """Copy of the durable tier's I/O counters (zeros when memory-only).
+        The executor diffs this around a run to attribute storage I/O."""
+        if self.durable is None:
+            return {}
+        return dict(self.durable.io_stats)
+
+    # -- eviction loop ---------------------------------------------------------
+    def _touch(self, name: str) -> None:
+        self._access_clock += 1
+        self._last_access[name] = self._access_clock
+
+    def resident_bytes(self) -> int:
+        """Bytes of column data currently held in RAM/device memory (spilled
+        memmap views count as 0 — they are disk-backed).  Retired-but-
+        retained generations count too: they hold real memory until their
+        retention window closes."""
+        total = 0
+        retired = [d for lst in self._retired.values() for d in lst]
+        for ds in list(self.datasets.values()) + retired:
+            for v in ds.columns.values():
+                if not isinstance(v, np.memmap):
+                    total += int(v.nbytes)
+        return total
+
+    def is_spilled(self, name: str) -> bool:
+        return self.datasets[name].spilled
+
+    def spill(self, name: str) -> bool:
+        """Evict ``name``'s current generation to its segment files: columns
+        become read-only memmap views (bit-identical by construction).
+        Persists first if the generation isn't durable yet.  Returns False
+        on a memory-only store."""
+        if self.durable is None:
+            return False
+        ds = self.datasets[name]
+        if ds.spilled:
+            return True
+        self.flush(name)
+        man = self.durable.load_manifest(name, ds.generation)
+        if man is None:                  # validation failed — keep resident
+            return False
+        return self._swap_to_segments(ds, man)
+
+    def _swap_to_segments(self, ds: StoredDataset, man) -> bool:
+        """Replace ``ds``'s column containers with memmap views of their
+        persisted segments (same bits, shared by every reader)."""
+        freed = sum(int(v.nbytes) for v in ds.columns.values()
+                    if not isinstance(v, np.memmap))
+        cols = self.durable.open_columns(ds.name, man)
+        with self._swap_lock:
+            for k in list(ds.columns):
+                ds.columns[k] = cols[k]
+        self.durable.io_stats["spills"] += 1
+        self.durable.io_stats["spilled_bytes"] += freed
+        return True
+
+    def _spill_retired(self) -> int:
+        """Evict retired-but-retained generations first: they hold real
+        memory, are never read on the hot path, and the durable tier
+        retains the same generation window on disk."""
+        spilled = 0
+        for name, lst in self._retired.items():
+            for old in lst:
+                if old.spilled:
+                    continue
+                if not self.durable.has_generation(name, old.generation):
+                    # segments + manifest only: CURRENT must never move
+                    # backwards to a superseded generation
+                    self.durable.persist(old, publish_current=False)
+                man = self.durable.load_manifest(name, old.generation)
+                if man is not None and self._swap_to_segments(old, man):
+                    spilled += 1
+        return spilled
+
+    def prefetch(self, name: str) -> bool:
+        """Promote a spilled dataset back to residency: in-RAM copies on a
+        host store, device arrays (host→device prefetch) on a
+        device-resident one.  Returns True when the dataset is resident."""
+        ds = self.datasets[name]
+        if not ds.spilled:
+            return True
+        t0 = time.perf_counter()
+        loaded = 0
+        promoted: Columns = {}
+        for k, v in ds.columns.items():
+            arr = np.array(v)            # one sequential segment read
+            loaded += int(arr.nbytes)
+            if self._storage_prefetch:
+                promoted[k] = jax.numpy.asarray(arr) \
+                    if dtype_roundtrips(arr.dtype) else arr
+            else:
+                promoted[k] = arr
+        with self._swap_lock:
+            for k in list(ds.columns):
+                ds.columns[k] = promoted[k]
+        if self.durable is not None:
+            io = self.durable.io_stats
+            io["bytes_read"] += loaded
+            io["read_s"] += time.perf_counter() - t0
+            io["rehydrations"] += 1
+            io["rehydrated_bytes"] += loaded
+        self._touch(name)
+        self._maybe_evict(exclude=name)
+        return True
+
+    def _maybe_evict(self, exclude: Optional[str] = None) -> int:
+        """Enforce ``memory_budget_bytes``: spill coldest-first (LRU by
+        last read/install) until resident bytes fit.  Requires the durable
+        tier; a memory-only store never spills."""
+        if self.memory_budget_bytes is None or self.durable is None:
+            return 0
+        spilled = 0
+        if self.resident_bytes() > self.memory_budget_bytes:
+            spilled += self._spill_retired()
+        while self.resident_bytes() > self.memory_budget_bytes:
+            before = self.resident_bytes()
+            victims = sorted(
+                (n for n, d in self.datasets.items()
+                 if not d.spilled and n != exclude),
+                key=lambda n: self._last_access.get(n, 0))
+            if not victims:
+                break
+            if not self.spill(victims[0]):
+                break
+            spilled += 1
+            if self.resident_bytes() >= before:
+                break                    # no progress (e.g. 0-size columns)
+        return spilled
 
     # -- write path (storage-time partitioning) ------------------------------
     def write(self, name: str, data: Columns,
@@ -186,7 +455,7 @@ class PartitionStore:
                            counts=counts.astype(np.int64),
                            partitioner=partitioner, num_rows=n, nbytes=nbytes)
         self._install(name, ds)
-        self.write_log.append({
+        self._log_write({
             "name": name, "rows": n, "bytes": nbytes,
             "strategy": partitioner.strategy,
             "latency": time.perf_counter() - t0,
@@ -274,12 +543,25 @@ class PartitionStore:
     def read(self, name: str,
              generation: Optional[int] = None) -> StoredDataset:
         """Current generation of ``name``; pass ``generation`` to resolve a
-        specific (possibly superseded, still-retained) one."""
+        specific (possibly superseded, still-retained) one.
+
+        On a device-resident durable store, reading a spilled dataset
+        prefetches it host→device first (DESIGN §10); a host store reads
+        straight through the memmap views (lazy page-in)."""
         ds = self.datasets[name]
         if generation is None or ds.generation == generation:
-            return ds
+            self._touch(name)
+            if self._storage_prefetch and ds.spilled:
+                self.prefetch(name)
+            return self.datasets[name]
         for old in reversed(self._retired.get(name, [])):
             if old.generation == generation:
+                return old
+        if self.durable is not None:
+            # a fresh process retains no in-memory retired generations, but
+            # the durable tier keeps the same retention window on disk
+            old = self.durable.load(name, generation)
+            if old is not None:
                 return old
         raise RetiredGenerationError(
             f"{name}@gen{generation} not found "
@@ -329,7 +611,7 @@ class PartitionStore:
             if mesh is not None:
                 new = device_put_dataset(mesh, new)
             self._install(name, new)
-            self.write_log.append({
+            self._log_write({
                 "name": name, "rows": new.num_rows, "bytes": new.nbytes,
                 "strategy": partitioner.strategy,
                 "latency": time.perf_counter() - t0,

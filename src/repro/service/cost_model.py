@@ -20,6 +20,13 @@ two sources: live timings (the Observer feeds every run's
 ``shuffle_bytes / shuffle_s``) and committed ``BENCH_*.json`` snapshots
 (:meth:`WhatIfCostModel.load_bench_json` parses the repartition rows).
 With neither, the paper's 10 Gbps cluster bandwidth is the prior.
+
+Durable stores (DESIGN §10) add an **I/O side**: applying a layout to a
+store with ``root=`` also writes the new generation's segments, and a
+spilled source must be rehydrated off disk first.  Those bytes are priced
+at the measured storage throughput (the Observer feeds every run's
+``storage_io_bytes / storage_io_s``; the Autopilot feeds each applied
+decision's flush) with an NVMe-class prior before any sample arrives.
 """
 
 from __future__ import annotations
@@ -34,6 +41,7 @@ from ..core.matching import partitioning_match
 from ..core.partitioner import PartitionerCandidate
 
 DEFAULT_BANDWIDTH = 1.25e9          # 10 Gbps — the paper's cluster prior
+DEFAULT_DISK_BANDWIDTH = 2e9        # NVMe-class prior for the durable tier
 
 
 @dataclass
@@ -65,27 +73,38 @@ class LayoutScore:
     repartition_s: float      # modeled one-time cost of applying the layout
     runs_in_window: float     # consumer runs (weight-aware) that scanned D
     shuffles_delta: float     # Σ runs × (elisions_new − elisions_current)
+    io_s: float = 0.0         # durable-tier I/O: rehydrate spilled source +
+                              # persist the new generation (DESIGN §10)
+
+    @property
+    def apply_cost_s(self) -> float:
+        """Total one-time cost of applying the layout (shuffle + I/O)."""
+        return self.repartition_s + self.io_s
 
     @property
     def net_s(self) -> float:
-        return self.benefit_s - self.repartition_s
+        return self.benefit_s - self.apply_cost_s
 
     def worth_it(self, hysteresis: float, horizon: float = 1.0) -> bool:
-        """Modeled benefit must clear the one-time repartition cost by the
-        hysteresis factor — the flip-flop guard.  ``horizon`` is the number
-        of future recency windows the new layout is expected to stay
-        useful: ``benefit_s`` is a per-window rate while the repartition is
-        paid once, so the gate amortizes exactly like Eq. 2 trades the
-        producer-side cost against future consumer runs."""
-        return self.benefit_s * horizon > hysteresis * self.repartition_s
+        """Modeled benefit must clear the one-time apply cost (repartition
+        shuffle + any durable-tier I/O) by the hysteresis factor — the
+        flip-flop guard.  ``horizon`` is the number of future recency
+        windows the new layout is expected to stay useful: ``benefit_s`` is
+        a per-window rate while the apply cost is paid once, so the gate
+        amortizes exactly like Eq. 2 trades the producer-side cost against
+        future consumer runs."""
+        return self.benefit_s * horizon > hysteresis * self.apply_cost_s
 
 
 class WhatIfCostModel:
     def __init__(self, default_bandwidth: float = DEFAULT_BANDWIDTH,
-                 bench_path: Optional[str] = None):
+                 bench_path: Optional[str] = None,
+                 default_disk_bandwidth: float = DEFAULT_DISK_BANDWIDTH):
         self.default_bandwidth = default_bandwidth
+        self.default_disk_bandwidth = default_disk_bandwidth
         self.shuffle_cal = Calibration()
         self.repartition_cal = Calibration()
+        self.io_cal = Calibration()
         if bench_path:
             self.load_bench_json(bench_path)
 
@@ -95,6 +114,11 @@ class WhatIfCostModel:
 
     def observe_repartition(self, nbytes: float, seconds: float) -> None:
         self.repartition_cal.observe(nbytes, seconds)
+
+    def observe_io(self, nbytes: float, seconds: float) -> None:
+        """Durable-tier sample: segment bytes moved / wall seconds (spill
+        flushes, rehydration reads, autoflushed generations)."""
+        self.io_cal.observe(nbytes, seconds)
 
     def load_bench_json(self, path: str) -> int:
         """Best-effort calibration from a committed BENCH_*.json snapshot:
@@ -143,6 +167,14 @@ class WhatIfCostModel:
     def repartition_seconds(self, nbytes: float) -> float:
         return nbytes / self.repartition_throughput()
 
+    def io_throughput(self) -> float:
+        t = self.io_cal.throughput()
+        return t if t is not None else self.default_disk_bandwidth
+
+    def io_seconds(self, nbytes: float) -> float:
+        """Durable-tier transfer time for ``nbytes`` of segment data."""
+        return nbytes / self.io_throughput()
+
     # -- what-if scoring ----------------------------------------------------
     @staticmethod
     def elisions_per_run(candidate: Optional[PartitionerCandidate],
@@ -159,13 +191,24 @@ class WhatIfCostModel:
               current: Optional[PartitionerCandidate],
               history: HistoryStore, *, now: float,
               window_s: float = float("inf"),
-              groups: Optional[Dict] = None) -> LayoutScore:
+              groups: Optional[Dict] = None,
+              durable: bool = False,
+              source_spilled: bool = False) -> LayoutScore:
         """What-if score of moving ``dataset`` from layout ``current`` to
         ``candidate``, against the run mix observed inside the recency
         window ``[now - window_s, now]`` (drifted-away workloads age out).
         Pass a prebuilt skeleton ``groups`` dict to amortize the graph
-        build across many scores of one history snapshot."""
+        build across many scores of one history snapshot.
+
+        ``durable`` charges persisting the repartitioned generation's
+        segments; ``source_spilled`` additionally charges rehydrating the
+        evicted source off disk before it can be shuffled (DESIGN §10)."""
         per_shuffle_s = self.shuffle_seconds(ds_bytes, num_workers)
+        io_s = 0.0
+        if durable:
+            io_s += self.io_seconds(ds_bytes)
+        if source_spilled:
+            io_s += self.io_seconds(ds_bytes)
         if groups is None:
             groups, _ = history.skeleton_graph()
         benefit = 0.0
@@ -188,4 +231,5 @@ class WhatIfCostModel:
             dataset=dataset, candidate_signature=candidate.signature(),
             benefit_s=benefit,
             repartition_s=self.repartition_seconds(ds_bytes),
-            runs_in_window=runs_in_window, shuffles_delta=shuffles_delta)
+            runs_in_window=runs_in_window, shuffles_delta=shuffles_delta,
+            io_s=io_s)

@@ -95,6 +95,14 @@ class Observer:
                 and stats.shuffle_s > 0:
             self.cost_model.observe_shuffle(stats.shuffle_bytes,
                                             stats.shuffle_s)
+        # durable-tier calibration (DESIGN §10): live segment I/O this run
+        # caused (autoflushed writes, spill rehydration) prices the cost
+        # model's spill/load charges
+        if self.cost_model is not None \
+                and getattr(stats, "storage_io_bytes", 0) \
+                and stats.storage_io_s > 0:
+            self.cost_model.observe_io(stats.storage_io_bytes,
+                                       stats.storage_io_s)
         if self.max_records is not None and len(self.history.records) \
                 >= self.max_records + self.compact_slack:
             self.compacted_total += self.history.compact(self.max_records)

@@ -152,11 +152,18 @@ class StorageOptimizer:
                 action_index=idx, state=state,
                 elapsed_s=time.perf_counter() - t0)
 
-            # what-if gate against the live layout
+            # what-if gate against the live layout; a durable store also
+            # pays segment I/O (persist the new generation, rehydrate a
+            # spilled source) — priced by the calibrated io throughput
             score = self.cost_model.score(
                 name, float(ds.nbytes), ds.num_workers, cand,
                 ds.partitioner, self.history, now=now,
-                window_s=self.cfg.window_s, groups=groups)
+                window_s=self.cfg.window_s, groups=groups,
+                # only charge the persist when applying will actually pay
+                # it (autoflush); batched-flush stores defer that cost
+                durable=self.store.is_durable and self.store.autoflush,
+                source_spilled=self.store.is_durable
+                and self.store.is_spilled(name))
             report.considered.append((name, cand.signature(), score))
             if (ds.partitioner is not None
                     and ds.partitioner.signature() == cand.signature()):
@@ -172,24 +179,72 @@ class StorageOptimizer:
             # apply: materialize off to the side, atomically flip (swap)
             name = decision.dataset
             ds_bytes = float(self.store.read(name).nbytes)
+            io0 = self.store.io_snapshot()
             t1 = time.perf_counter()
             new, moved = apply_decision(self.store, decision, mesh=self.mesh)
             wall = time.perf_counter() - t1
-            self.cost_model.observe_repartition(ds_bytes, wall)
+            # the wall includes any autoflush persist; attribute that slice
+            # to the io calibration and only the remainder to the shuffle,
+            # so score()'s repartition_s + io_s never double-charges
+            io_wall = self._feed_io_calibration(io0)
+            self.cost_model.observe_repartition(ds_bytes,
+                                                max(wall - io_wall, 0.0))
             self._cooldown[name] = self.cfg.cooldown_ticks
             path = "host"
             if self.store.write_log and \
                     self.store.write_log[-1].get("name") == name:
                 path = self.store.write_log[-1].get("path", "host")
-            report.applied.append(AppliedDecision(
+            applied = AppliedDecision(
                 dataset=name, decision=decision, score=score,
                 generation=new.generation, moved_bytes=moved,
-                repartition_wall_s=wall, path=path))
+                repartition_wall_s=wall, path=path)
+            report.applied.append(applied)
+            self._catalog_log(applied, now)
         if self.cfg.max_history_records is not None:
             report.compacted = self.history.compact(
                 self.cfg.max_history_records)
         self.reports.append(report)
         return report
+
+    # -- durable-store integration (DESIGN §10) ------------------------------
+    def _feed_io_calibration(self, io_before) -> float:
+        """Turn the segment I/O an applied decision just caused (persist of
+        the swapped generation, rehydration of a spilled source) into an
+        io-throughput sample for the what-if model.  Returns the I/O wall
+        seconds so the caller can subtract them from the shuffle sample."""
+        if not io_before:
+            return 0.0
+        io1 = self.store.io_snapshot()
+        d_bytes = (io1["bytes_written"] - io_before["bytes_written"]
+                   + io1["bytes_read"] - io_before["bytes_read"])
+        d_s = (io1["write_s"] - io_before["write_s"]
+               + io1["read_s"] - io_before["read_s"])
+        if d_bytes > 0 and d_s > 0:
+            self.cost_model.observe_io(d_bytes, d_s)
+        return max(float(d_s), 0.0)
+
+    def _catalog_log(self, applied: AppliedDecision, now: float) -> None:
+        """Record an applied decision in the durable store's catalog
+        (``decisions.log``), so a later process reopening the store can
+        audit why its layouts look the way they do.  No-op when the store
+        is memory-only."""
+        if self.store.durable is None:
+            return
+        s = applied.score
+        self.store.durable.log_decision({
+            "tick": self._tick_no, "now": float(now),
+            "dataset": applied.dataset,
+            "candidate": applied.decision.candidate.signature(),
+            "generation": applied.generation,
+            "moved_bytes": int(applied.moved_bytes),
+            "repartition_wall_s": float(applied.repartition_wall_s),
+            "path": applied.path,
+            "benefit_s": float(s.benefit_s),
+            "repartition_s": float(s.repartition_s),
+            "io_s": float(s.io_s),
+            "runs_in_window": float(s.runs_in_window),
+            "shuffles_delta": float(s.shuffles_delta),
+        })
 
     # -- background service mode ---------------------------------------------
     def start(self, period_s: float = 1.0) -> None:

@@ -1,0 +1,526 @@
+"""Durable storage tier (DESIGN §10): segment/manifest round-trip,
+crash-safety fallback, eviction/spill, cross-session shuffle elision."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Workload, enumerate_candidates
+from repro.core.executor import TableVal
+from repro.data.partition_store import PartitionStore
+from repro.data.storage import RestoredPartitioner
+from repro.data.storage.durable import DurableStore
+from repro.data.storage.manifest import gen_dirname, manifest_filename
+from repro.api import Session
+from repro.service.observer import LogicalClock
+
+
+def _keyed_candidate(dataset="d"):
+    wl = Workload("w")
+    ds = wl.scan(dataset)
+    wl.partition(ds["k"])
+    return enumerate_candidates(wl.graph, dataset)[0]
+
+
+def _data(n=120, seed=0, dtype=np.int64):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.integers(0, 37, size=n).astype(dtype),
+            "v": np.arange(n, dtype=np.float32) + seed}
+
+
+def _assert_datasets_equal(a, b):
+    assert a.generation == b.generation
+    assert a.num_rows == b.num_rows
+    assert a.capacity == b.capacity
+    np.testing.assert_array_equal(a.counts, b.counts)
+    ga, gb = a.gather(), b.gather()
+    assert set(ga) == set(gb)
+    for k in ga:
+        assert ga[k].dtype == gb[k].dtype
+        np.testing.assert_array_equal(ga[k], gb[k])
+
+
+# ---------------------------------------------------------------------------
+# round-trip
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_bit_identical(tmp_path):
+    root = str(tmp_path / "store")
+    s = PartitionStore(num_workers=4, root=root)
+    ds = s.write("d", _data(), _keyed_candidate())
+    s2 = PartitionStore.open(root)
+    d2 = s2.read("d")
+    assert d2.spilled                       # reopened columns are memmap views
+    _assert_datasets_equal(ds, d2)
+    # the partitioner identity survived: same Alg.4 signature set
+    assert d2.partitioner.signature() == ds.partitioner.signature()
+
+
+def test_restored_partitioner_matches_but_cannot_dispatch(tmp_path):
+    root = str(tmp_path / "store")
+    PartitionStore(num_workers=4, root=root).write("d", _data(),
+                                                   _keyed_candidate())
+    p = PartitionStore.open(root).read("d").partitioner
+    assert isinstance(p, RestoredPartitioner)
+    assert p.is_keyed
+    assert p.signature_set() == _keyed_candidate().signature_set()
+    with pytest.raises(ValueError, match="restored partitioner"):
+        p.key_fn()
+
+
+def test_roundtrip_device_columns(tmp_path):
+    """A device-resident store persists through host views; reopening on
+    either backend yields the same bits, and a device reopen prefetches
+    the columns back onto the device on first read."""
+    root = str(tmp_path / "store")
+    dev = PartitionStore(num_workers=4, backend="device", root=root)
+    ds = dev.write("d", _data(), _keyed_candidate())
+    assert ds.backend == "device"
+
+    host_view = PartitionStore.open(root)           # host backend reopen
+    _assert_datasets_equal(ds.to_host(), host_view.read("d"))
+
+    dev_view = PartitionStore.open(root, backend="device")
+    got = dev_view.read("d")                        # read → host→device
+    assert got.backend == "device"
+    assert not got.spilled
+    _assert_datasets_equal(ds.to_host(), got.to_host())
+
+
+def test_unsafe_dataset_and_column_names_roundtrip(tmp_path):
+    """Dataset and column names with path separators / odd characters are
+    percent-encoded on disk — no crash, no directory escape."""
+    root = str(tmp_path / "store")
+    s = PartitionStore(num_workers=4, root=root)
+    ds = s.write("tenant/2026 events", {"user/id": np.arange(80),
+                                        "v": np.arange(80.0)})
+    got = PartitionStore.open(root).read("tenant/2026 events")
+    _assert_datasets_equal(ds, got)
+    assert set(got.gather()) == {"user/id", "v"}
+    # nothing escaped the store root
+    for dirpath, _dirs, _files in os.walk(str(tmp_path)):
+        assert os.path.commonpath([dirpath, root]) == root \
+            or dirpath == str(tmp_path)
+
+
+def test_open_adopts_catalog_worker_count(tmp_path):
+    root = str(tmp_path / "store")
+    PartitionStore(num_workers=4, root=root).write("d", _data())
+    s = PartitionStore.open(root, num_workers=16)
+    assert s.m == 4                      # (m, capacity) layouts fix m
+
+
+def test_generation_continuity_and_disk_retention(tmp_path):
+    root = str(tmp_path / "store")
+    s = PartitionStore(num_workers=4, root=root, max_retired_generations=2)
+    for i in range(4):
+        s.write("d", _data(seed=i), _keyed_candidate())
+    assert s.generation_of("d") == 3
+
+    s2 = PartitionStore.open(root)
+    assert s2.generation_of("d") == 3
+    # a fresh process resolves retained generations from disk...
+    old = s2.read("d", generation=2)
+    _assert_datasets_equal(old, s.read("d", generation=2))
+    # ...and GC pruned past the retention window
+    ds_dir = os.path.join(root, "datasets", "d")
+    assert not os.path.exists(os.path.join(ds_dir, manifest_filename(0)))
+    assert not os.path.exists(os.path.join(ds_dir, gen_dirname(0)))
+    # repartitions in the new process continue the generation sequence
+    new, _ = s2.repartition(s2.read("d"), _keyed_candidate(), swap=True)
+    assert new.generation == 4
+
+
+# ---------------------------------------------------------------------------
+# crash safety: every partial-write shape reopens to the prior generation
+# ---------------------------------------------------------------------------
+
+def _two_generations(root):
+    s = PartitionStore(num_workers=4, root=root)
+    g0 = s.write("d", _data(seed=1), _keyed_candidate())
+    g1 = s.write("d", _data(seed=2), _keyed_candidate())
+    return g0, g1
+
+
+def test_truncated_segment_falls_back_bit_identically(tmp_path):
+    root = str(tmp_path / "store")
+    g0, g1 = _two_generations(root)
+    seg = os.path.join(root, "datasets", "d", gen_dirname(1), "k.seg")
+    with open(seg, "r+b") as f:
+        f.truncate(os.path.getsize(seg) // 2)
+    reopened = PartitionStore.open(root).read("d")
+    assert reopened.generation == 0
+    _assert_datasets_equal(g0, reopened)
+
+
+def test_missing_manifest_falls_back(tmp_path):
+    root = str(tmp_path / "store")
+    g0, _ = _two_generations(root)
+    os.remove(os.path.join(root, "datasets", "d", manifest_filename(1)))
+    _assert_datasets_equal(g0, PartitionStore.open(root).read("d"))
+
+
+def test_torn_manifest_falls_back(tmp_path):
+    root = str(tmp_path / "store")
+    g0, _ = _two_generations(root)
+    man = os.path.join(root, "datasets", "d", manifest_filename(1))
+    with open(man, "w") as f:
+        f.write('{"name": "d", "gener')        # torn mid-write
+    _assert_datasets_equal(g0, PartitionStore.open(root).read("d"))
+
+
+def test_missing_current_pointer_recovers_latest(tmp_path):
+    root = str(tmp_path / "store")
+    _, g1 = _two_generations(root)
+    os.remove(os.path.join(root, "datasets", "d", "CURRENT"))
+    _assert_datasets_equal(g1, PartitionStore.open(root).read("d"))
+
+
+def test_leftover_tmp_files_are_ignored(tmp_path):
+    root = str(tmp_path / "store")
+    _, g1 = _two_generations(root)
+    ds_dir = os.path.join(root, "datasets", "d")
+    for junk in ("CURRENT.tmp", manifest_filename(2) + ".tmp",
+                 os.path.join(gen_dirname(1), "v.seg.tmp")):
+        with open(os.path.join(ds_dir, junk), "w") as f:
+            f.write("partial")
+    _assert_datasets_equal(g1, PartitionStore.open(root).read("d"))
+
+
+def test_empty_root_opens_empty(tmp_path):
+    s = PartitionStore.open(str(tmp_path / "fresh"))
+    assert s.datasets == {}
+    assert s.is_durable
+
+
+# ---------------------------------------------------------------------------
+# property: dtype/shape round-trip through segment files
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # dev extra missing
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _DTYPES = [np.int64, np.int32, np.int16, np.uint8,
+               np.float64, np.float32]
+
+    @given(st.integers(2, 8),
+           st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=120),
+           st.sampled_from(_DTYPES),
+           st.integers(0, 3),
+           st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def test_segment_roundtrip_property(tmp_path_factory, m, keys, vdtype,
+                                        inner, device):
+        """Any dtype/shape written through the store round-trips through
+        segment files bit-identically — including device-backed columns
+        (persisted via their host views)."""
+        tmp = tmp_path_factory.mktemp("seg")
+        root = str(tmp / "store")
+        keys = np.asarray(keys, np.int64)
+        n = keys.shape[0]
+        shape = (n,) if inner == 0 else (n, inner)
+        if np.issubdtype(vdtype, np.integer):
+            vals = (np.arange(np.prod(shape)) % 251).astype(
+                vdtype).reshape(shape)
+        else:
+            vals = (np.arange(np.prod(shape), dtype=np.float64)
+                    * 0.37).astype(vdtype).reshape(shape)
+        store = PartitionStore(num_workers=m, root=root,
+                               backend="device" if device else "host")
+        ds = store.write("d", {"k": keys, "v": vals}, _keyed_candidate())
+        got = PartitionStore.open(root).read("d")
+        _assert_datasets_equal(ds.to_host(), got)
+        g = got.gather()
+        assert g["v"].dtype == np.dtype(vdtype)
+        assert g["v"].shape == shape
+else:                                                 # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_segment_roundtrip_property():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# eviction loop
+# ---------------------------------------------------------------------------
+
+def test_spill_and_rehydrate_bit_identical(tmp_path):
+    root = str(tmp_path / "store")
+    s = PartitionStore(num_workers=4, root=root)
+    ds = s.write("d", _data(400))
+    before = {k: np.array(v) for k, v in ds.gather().items()}
+    assert s.spill("d")
+    assert s.is_spilled("d")
+    assert s.resident_bytes() == 0
+    after = s.read("d").gather()             # lazy memmap read-through
+    for k in before:
+        np.testing.assert_array_equal(before[k], after[k])
+    assert s.prefetch("d")
+    assert not s.is_spilled("d")
+    assert s.resident_bytes() > 0
+    io = s.io_snapshot()
+    assert io["spills"] == 1 and io["rehydrations"] == 1
+    assert io["rehydrated_bytes"] > 0
+
+
+def test_memory_budget_evicts_coldest_first(tmp_path):
+    root = str(tmp_path / "store")
+    s = PartitionStore(num_workers=4, root=root)
+    s.write("a", {"x": np.arange(400, dtype=np.float64)})
+    s.write("b", {"x": np.arange(400, dtype=np.float64)})
+    per_ds = s.resident_bytes() // 2
+    s.read("a")                              # a is now hotter than b
+    s.memory_budget_bytes = per_ds + per_ds // 2   # room for one dataset
+    assert s._maybe_evict() == 1
+    assert s.is_spilled("b") and not s.is_spilled("a")
+    assert s.resident_bytes() <= s.memory_budget_bytes
+
+
+def test_budget_on_write_keeps_store_under_budget(tmp_path):
+    root = str(tmp_path / "store")
+    s = PartitionStore(num_workers=4, root=root, memory_budget_bytes=2000)
+    for i in range(4):
+        s.write(f"d{i}", {"x": np.arange(300, dtype=np.float64) + i})
+    assert s.resident_bytes() <= 2000
+    assert any(s.is_spilled(f"d{i}") for i in range(4))
+    for i in range(4):                       # everything still readable
+        got = np.sort(s.read(f"d{i}").gather()["x"])
+        np.testing.assert_array_equal(got, np.arange(300, dtype=np.float64) + i)
+
+
+def test_zero_size_column_does_not_wedge_eviction(tmp_path):
+    """A (n, 0) column can't be memmapped; it must not keep its dataset
+    'resident' forever (which would spin the eviction loop)."""
+    root = str(tmp_path / "store")
+    s = PartitionStore(num_workers=4, root=root)
+    s.write("z", {"k": np.arange(64, dtype=np.int64),
+                  "empty": np.zeros((64, 0), np.float32)})
+    s.write("big", {"x": np.arange(600, dtype=np.float64)})
+    s.memory_budget_bytes = 8           # force eviction of everything
+    s._maybe_evict()                    # must terminate
+    assert s.is_spilled("z") and s.is_spilled("big")
+    got = s.read("z").gather()
+    assert got["empty"].shape == (64, 0)
+    np.testing.assert_array_equal(np.sort(got["k"]), np.arange(64))
+
+
+def test_budget_counts_and_spills_retired_generations(tmp_path):
+    """Superseded-but-retained generations hold real memory; the budget
+    sees them and the eviction loop spills them first — without moving
+    the CURRENT pointer backwards."""
+    root = str(tmp_path / "store")
+    s = PartitionStore(num_workers=4, root=root)
+    s.write("d", _data(400, seed=1))
+    base = s.resident_bytes()
+    s.write("d", _data(400, seed=2), _keyed_candidate())   # gen0 retired
+    assert s.resident_bytes() > base    # retired gen counted
+    s.memory_budget_bytes = base + base // 2
+    s._maybe_evict()
+    assert all(old.spilled for old in s._retired["d"])
+    assert not s.is_spilled("d")        # current generation stayed hot
+    assert s.resident_bytes() <= s.memory_budget_bytes
+    # CURRENT still points at the newest generation
+    assert PartitionStore.open(root).generation_of("d") == 1
+
+
+def test_device_read_prefetches_spilled_dataset(tmp_path):
+    root = str(tmp_path / "store")
+    PartitionStore(num_workers=4, backend="device",
+                   root=root).write("d", _data(), _keyed_candidate())
+    s = PartitionStore.open(root, backend="device")
+    assert s.datasets["d"].spilled           # attached cold
+    got = s.read("d")                        # device backend → prefetch
+    assert got.backend == "device"
+    assert s.io_snapshot()["rehydrations"] == 1
+
+
+# ---------------------------------------------------------------------------
+# manual flush / dirty tracking
+# ---------------------------------------------------------------------------
+
+def test_autoflush_off_requires_flush(tmp_path):
+    root = str(tmp_path / "store")
+    s = PartitionStore(num_workers=4, root=root, autoflush=False)
+    ds = s.write("d", _data(), _keyed_candidate())
+    assert PartitionStore.open(root).datasets == {}    # nothing durable yet
+    assert s.flush() == 1
+    _assert_datasets_equal(ds, PartitionStore.open(root).read("d"))
+    assert s.flush() == 0                    # idempotent: already published
+
+
+# ---------------------------------------------------------------------------
+# bounded write_log (satellite)
+# ---------------------------------------------------------------------------
+
+def test_write_log_bounded_with_monotone_totals():
+    s = PartitionStore(num_workers=4, write_log_cap=4)
+    total_bytes = 0
+    for i in range(10):
+        ds = s.write(f"d{i % 2}", _data(60, seed=i))
+        total_bytes += ds.nbytes
+    assert len(s.write_log) == 4
+    t = s.write_stats()
+    assert t["entries"] == 10 and t["evicted"] == 6
+    assert t["bytes"] == total_bytes         # aggregates cover evicted rows
+    assert t["rows"] == 10 * 60
+    # most-recent entries survive (optimizer reads write_log[-1])
+    assert s.write_log[-1]["generation"] == s.generation_of("d1")
+
+
+# ---------------------------------------------------------------------------
+# vectorized gather (satellite): order matches the per-worker loop
+# ---------------------------------------------------------------------------
+
+def test_gather_order_matches_worker_loop():
+    s = PartitionStore(num_workers=5)
+    ds = s.write("d", _data(333, seed=7), _keyed_candidate())
+    ref = {}
+    for k, v in ds.columns.items():
+        v = np.asarray(v)
+        ref[k] = np.concatenate(
+            [v[w, :ds.counts[w]] for w in range(ds.num_workers)], axis=0)
+    got = ds.gather()
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], got[k])
+        assert ref[k].dtype == got[k].dtype
+
+
+# ---------------------------------------------------------------------------
+# cost model I/O charging + executor I/O stats
+# ---------------------------------------------------------------------------
+
+def test_cost_model_charges_spill_and_persist_io():
+    from repro.service.cost_model import WhatIfCostModel
+    from repro.core.history import HistoryStore
+
+    cm = WhatIfCostModel()
+    cm.observe_io(1e9, 1.0)                  # measured 1 GB/s storage
+    assert cm.io_throughput() == pytest.approx(1e9)
+    assert cm.io_seconds(2e9) == pytest.approx(2.0)
+
+    hist = HistoryStore()
+    wl = Workload("consumer")
+    t = wl.scan("d")
+    wl.partition(t["k"])
+    for ts in (1.0, 2.0, 3.0):
+        hist.log_workload(wl, timestamp=ts, latency=1.0)
+    cand = _keyed_candidate()
+    kw = dict(history=hist, now=4.0)
+    base = cm.score("d", 1e9, 4, cand, None, **kw)
+    dur = cm.score("d", 1e9, 4, cand, None, durable=True, **kw)
+    spilled = cm.score("d", 1e9, 4, cand, None, durable=True,
+                       source_spilled=True, **kw)
+    assert base.io_s == 0.0
+    assert dur.io_s == pytest.approx(1.0)            # persist new generation
+    assert spilled.io_s == pytest.approx(2.0)        # + rehydrate source
+    assert dur.apply_cost_s > base.apply_cost_s
+    # the gate prices I/O: same benefit (1.8s here) clears the in-memory
+    # bar but not the durable one at hysteresis=2, horizon=1
+    assert base.worth_it(2.0, 1.0)
+    assert not dur.worth_it(2.0, 1.0)
+
+
+def test_executor_reports_storage_io(tmp_path):
+    sess = Session(store_path=str(tmp_path / "store"), num_workers=4)
+    sess.write("events", _data(200))
+    wl = Workload("w")
+    t = wl.scan("events")
+    p = wl.partition(t["k"])
+    wl.write(p, "out")
+    res = sess.run(wl)
+    assert res.stats.storage_io_bytes > 0    # autoflushed "out" generation
+    assert res.stats.storage_io_s > 0
+
+    mem = Session(num_workers=4)
+    mem.write("events", _data(200))
+    res2 = mem.run(wl)
+    assert res2.stats.storage_io_bytes == 0  # memory-only store
+
+
+# ---------------------------------------------------------------------------
+# the headline scenario: Autopilot layout reused by a fresh process
+# ---------------------------------------------------------------------------
+
+def _consumer():
+    wl = Workload("consumer")
+    t = wl.scan("events")
+    p = wl.partition(t["k"])
+    wl.aggregate(p, reducer="sum")
+    return wl
+
+
+def _final_table(res):
+    return [v for v in res.values.values() if isinstance(v, TableVal)][-1]
+
+
+def test_cross_session_layout_reuse_elides_shuffle(tmp_path):
+    root = str(tmp_path / "store")
+    # process A: round-robin write, observed runs, Autopilot applies layout
+    a = Session(store_path=root, num_workers=4)
+    a.write("events", _data(800, seed=3))
+    ap = a.autopilot(clock=LogicalClock())
+    first = a.run(_consumer())
+    assert first.stats.shuffles_performed == 1
+    a.run(_consumer())
+    rep = ap.tick()
+    assert [d.dataset for d in rep.applied] == ["events"]
+    res_a = a.run(_consumer())
+    assert res_a.stats.shuffles_elided == 1
+
+    # the applied decision is in the durable catalog
+    decisions = a.store.durable.decisions()
+    assert decisions and decisions[-1]["dataset"] == "events"
+    assert decisions[-1]["candidate"] == rep.applied[0].decision \
+        .candidate.signature()
+
+    # process B (fresh Session, no shared state): reopen → zero-shuffle
+    b = Session(store_path=root)
+    assert b.num_workers == 4
+    res_b = b.run(_consumer())
+    assert res_b.stats.shuffles_elided == 1
+    assert res_b.stats.shuffles_performed == 0
+    assert res_b.stats.shuffle_bytes == 0
+    ta, tb = _final_table(res_a), _final_table(res_b)
+    np.testing.assert_array_equal(ta.counts, tb.counts)
+    for k in ta.columns:
+        got = np.asarray(tb.columns[k])
+        np.testing.assert_array_equal(np.asarray(ta.columns[k]), got)
+        assert np.asarray(ta.columns[k]).dtype == got.dtype
+
+
+def test_decision_log_survives_reopen(tmp_path):
+    root = str(tmp_path / "store")
+    d = DurableStore(root, num_workers=4)
+    d.log_decision({"dataset": "d", "generation": 1})
+    d.log_decision({"dataset": "d", "generation": 2})
+    with open(d.decisions_path, "a") as f:
+        f.write('{"torn":')                  # crash mid-append
+    got = DurableStore(root).decisions()
+    assert [r["generation"] for r in got] == [1, 2]
+
+
+def test_session_store_and_store_path_exclusive(tmp_path):
+    with pytest.raises(ValueError, match="store= or store_path="):
+        Session(store=PartitionStore(num_workers=2),
+                store_path=str(tmp_path / "s"))
+
+
+def test_plan_cache_pins_valid_across_restart(tmp_path):
+    """The plan cache key pins (dataset, generation, partitioner sig); a
+    reattached store resolves the same pins, so the first run of process B
+    compiles against the restored generation and subsequent runs hit."""
+    root = str(tmp_path / "store")
+    a = Session(store_path=root, num_workers=4)
+    a.write("events", _data(300), _keyed_candidate("events"))
+    key_a = a.planner.plan_key(_consumer(), "host")
+
+    b = Session(store_path=root)
+    key_b = b.planner.plan_key(_consumer(), "host")
+    assert key_a.layout == key_b.layout
+    b.run(_consumer())
+    res = b.run(_consumer())
+    assert res.stats.plan_cache_hit is True
