@@ -1,0 +1,148 @@
+"""Serving tier (DESIGN §11) — concurrent clients over one shared store.
+
+Three rows:
+
+* ``serving_throughput`` — aggregate completed requests/sec of a
+  plan-cache-hit query mix at 1, 4 and 16 concurrent clients against one
+  :class:`~repro.service.ServingFrontend`.  ``derived`` carries the
+  per-client-count rates, the 1→16 scaling factor (the PR 6 acceptance
+  bar is >2x) and the coalesced-hit rate — on a single-core host
+  coalescing, not parallelism, is where the scaling comes from: identical
+  queued requests share one execution.
+* ``serving_mixed_throughput`` — the same ladder with every client
+  opting out of coalescing (worst case: all executions run), isolating
+  how much of the headline row coalescing buys.
+* ``serving_p99_under_repartition`` — p50/p99 ticket latency of 16
+  clients while a background thread keeps flipping the scanned table's
+  layout generation.  ``failed`` must be 0: flips are invisible to
+  in-flight serves (MVCC reads + transparent re-plan).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.api import Session
+from repro.core import Workload, enumerate_candidates
+from repro.data.partition_store import PartitionStore
+from repro.service import drift_tables
+
+from .common import emit, scale
+
+
+def _query() -> Workload:
+    wl = Workload("serve-q")
+    li = wl.scan("lineitem")
+    od = wl.scan("orders")
+    j = wl.join(li, od, left_key=li["orderkey"], right_key=od["orderkey"],
+                tag="li_orders")
+    wl.aggregate(j, key=j["odate"], reducer="sum")
+    return wl
+
+
+def _seed_session() -> Session:
+    store = PartitionStore(num_workers=4, backend="host",
+                           max_retired_generations=16)
+    sess = Session(store)
+    tables = drift_tables(n_lineitem=scale(20000, 3000),
+                          n_orders=scale(5000, 800),
+                          n_parts=scale(500, 200))
+    for name, data in tables.items():
+        sess.write(name, data)
+    return sess
+
+
+def _drive(front, clients: int, per_client: int, coalesce: bool) -> float:
+    """Aggregate completed-requests/sec for `clients` threads issuing the
+    same plan-cache-hit query."""
+    wl = _query()
+    front.run(wl, timeout=300, block=True)          # warm plan + jit
+    errors = []
+
+    def client():
+        try:
+            for _ in range(per_client):
+                front.run(wl, coalesce=coalesce, timeout=300, block=True)
+        except BaseException as e:                  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=client) for _ in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    assert not errors, f"serving bench failed: {errors[:2]}"
+    return clients * per_client / wall
+
+
+def throughput_ladder() -> None:
+    per_client = scale(30, 8)
+    for coalesce, row in ((True, "serving_throughput"),
+                          (False, "serving_mixed_throughput")):
+        sess = _seed_session()
+        front = sess.serve(max_workers=16, max_queue=1024)
+        rates = {c: _drive(front, c, per_client, coalesce)
+                 for c in (1, 4, 16)}
+        st = front.stats()
+        hit_rate = st["coalesced"] / max(1, st["submitted"])
+        front.close()
+        emit(row, 1e6 / rates[16],
+             f"req_s_1={rates[1]:.1f} req_s_4={rates[4]:.1f} "
+             f"req_s_16={rates[16]:.1f} "
+             f"scaling_1to16={rates[16] / rates[1]:.2f}x "
+             f"coalesce_rate={hit_rate:.2f}")
+
+
+def latency_under_repartition() -> None:
+    sess = _seed_session()
+    front = sess.serve(max_workers=16, max_queue=1024)
+    wl = _query()
+    front.run(wl, timeout=300, block=True)
+    cand = enumerate_candidates(wl.graph, "lineitem")[0]
+
+    stop = threading.Event()
+    flips = [0]
+
+    def flipper():
+        while not stop.is_set():
+            sess.store.repartition(sess.store.read("lineitem"), cand,
+                                   swap=True)
+            flips[0] += 1
+
+    errors = []
+
+    def client():
+        try:
+            for _ in range(scale(12, 4)):
+                front.run(wl, coalesce=False, timeout=300, block=True)
+        except BaseException as e:                  # noqa: BLE001
+            errors.append(e)
+
+    ft = threading.Thread(target=flipper, daemon=True)
+    ft.start()
+    threads = [threading.Thread(target=client) for _ in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    ft.join(60)
+    assert not errors, f"serves failed under repartition: {errors[:2]}"
+    st = front.stats()
+    front.close()
+    assert st["failed"] == 0
+    emit("serving_p99_under_repartition", st["p99_ms"] * 1e3,
+         f"p50_ms={st['p50_ms']:.1f} p99_ms={st['p99_ms']:.1f} "
+         f"flips={flips[0]} completed={st['completed']} failed=0")
+
+
+def main() -> None:
+    throughput_ladder()
+    latency_under_repartition()
+
+
+if __name__ == "__main__":
+    main()

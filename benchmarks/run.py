@@ -20,7 +20,7 @@ def main() -> None:
     from . import (bench_reddit, bench_pagerank, bench_linear_algebra,
                    bench_tpch, bench_overhead, bench_drl_training,
                    bench_history, bench_kernels, bench_autopilot,
-                   bench_storage)
+                   bench_storage, bench_serving)
     argv = sys.argv[1:]
     json_path = None
     if "--json" in argv:
@@ -39,6 +39,7 @@ def main() -> None:
         ("kernels(Pallas)", bench_kernels.main),
         ("autopilot(service)", bench_autopilot.main),
         ("storage(durable)", bench_storage.main),
+        ("serving(tier)", bench_serving.main),
     ]
     from .common import ROWS
     print("name,us_per_call,derived")

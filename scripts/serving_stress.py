@@ -1,0 +1,104 @@
+"""Time-boxed serving-tier stress smoke (CI; DESIGN §11).
+
+One shared PartitionStore, CLIENTS concurrent clients hammering a
+ServingFrontend while a background thread keeps flipping the scanned
+table's layout generation.  Every result must be bit-identical to the
+serial baseline and nothing may fail — the serial-equivalence guarantee
+the serving tier is built on, as a standalone executable assertion.
+
+Usage: python scripts/serving_stress.py [seconds] [clients]
+Exits non-zero on any divergence, error or deadline overrun.
+"""
+
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.api import Session
+from repro.core import Workload, enumerate_candidates
+from repro.data.partition_store import PartitionStore
+from repro.service import aggregate_result, drift_tables
+
+BUDGET_S = float(sys.argv[1]) if len(sys.argv) > 1 else 20.0
+CLIENTS = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+
+
+def query() -> Workload:
+    wl = Workload("stress-q")
+    li = wl.scan("lineitem")
+    od = wl.scan("orders")
+    j = wl.join(li, od, left_key=li["orderkey"], right_key=od["orderkey"],
+                tag="li_orders")
+    wl.aggregate(j, key=j["odate"], reducer="sum")
+    return wl
+
+
+def main() -> int:
+    store = PartitionStore(num_workers=4, backend="host",
+                           max_retired_generations=16)
+    sess = Session(store)
+    for name, data in drift_tables(n_lineitem=3000, n_orders=800,
+                                   n_parts=200).items():
+        sess.write(name, data)
+
+    want = aggregate_result(sess.run(query()).values, query())
+    front = sess.serve(max_workers=CLIENTS, max_queue=4 * CLIENTS)
+    cand = enumerate_candidates(query().graph, "lineitem")[0]
+    deadline = time.perf_counter() + BUDGET_S
+    stop = threading.Event()
+    flips = [0]
+    errors = []
+
+    def flipper():
+        while not stop.is_set():
+            store.repartition(store.read("lineitem"), cand, swap=True)
+            flips[0] += 1
+
+    def client(cid):
+        try:
+            while time.perf_counter() < deadline:
+                res = front.run(query(), coalesce=bool(cid % 2),
+                                timeout=120, block=True)
+                got = aggregate_result(res.values, query())
+                for k in want:
+                    np.testing.assert_array_equal(got[k], want[k])
+        except BaseException as e:      # noqa: BLE001
+            errors.append((cid, repr(e)))
+
+    ft = threading.Thread(target=flipper, daemon=True)
+    ft.start()
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(CLIENTS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=BUDGET_S + 120)
+    stop.set()
+    ft.join(60)
+    stuck = [t for t in threads if t.is_alive()]
+    st = front.stats()
+    front.close(wait=not stuck)
+
+    print(f"serving_stress: clients={CLIENTS} budget={BUDGET_S}s "
+          f"completed={st['completed']} coalesced={st['coalesced']} "
+          f"flips={flips[0]} failed={st['failed']}")
+    if errors:
+        print(f"FAIL: {len(errors)} clients diverged/errored: {errors[:3]}")
+        return 1
+    if stuck:
+        print(f"FAIL: {len(stuck)} clients deadlocked past the deadline")
+        return 1
+    if st["failed"] or st["completed"] < CLIENTS:
+        print("FAIL: serving counters show failures or vacuous coverage")
+        return 1
+    if flips[0] < 2:
+        print("FAIL: background flipper never ran — stress was vacuous")
+        return 1
+    print("OK: bit-identical under concurrency + background repartition")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

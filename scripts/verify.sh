@@ -11,6 +11,11 @@
 #             write + Autopilot layout in process A, reopen + shuffle
 #             elision + bit-identical results in process B.
 #
+#   (always) then the serving-tier stress smoke (scripts/serving_stress.py,
+#             small-N, time-boxed): concurrent clients vs one store with a
+#             background thread flipping layout generations — every result
+#             must match the serial baseline bit-for-bit, zero failures.
+#
 #   --bench   after the tests, run the benchmark suite in smoke mode
 #             (LACHESIS_BENCH_SMOKE=1: synthetic inputs shrunk to CI size;
 #             the headline device-repartition rows keep their full N so the
@@ -58,6 +63,11 @@ JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python scripts/persistence_smoke.py write "$SMOKE_STORE"
 JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python scripts/persistence_smoke.py reopen "$SMOKE_STORE"
+
+# Serving tier (DESIGN §11): time-boxed concurrency stress — N clients,
+# background generation flips, bit-identical to the serial baseline.
+JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python scripts/serving_stress.py 10 8
 
 if [[ "$RUN_BENCH" == 1 ]]; then
     echo "== bench smoke → $BENCH_JSON"

@@ -297,6 +297,16 @@ class Session:
         from .service import Autopilot
         return Autopilot(self, **kw)
 
+    def serve(self, **kw):
+        """Open a concurrent serving frontend over this session's store
+        (DESIGN §11): bounded admission, request coalescing, per-tenant
+        namespaces/budgets.  Returns the
+        :class:`~repro.service.ServingFrontend`; composes with
+        :meth:`autopilot` — background repartitions stay invisible to
+        in-flight serves."""
+        from .service import ServingFrontend
+        return ServingFrontend(self, **kw)
+
     # -- internals ---------------------------------------------------------------
     def _resolve_wl(self, workload: Optional[Workload]) -> Workload:
         if workload is not None:

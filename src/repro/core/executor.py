@@ -25,6 +25,7 @@ import numpy as np
 
 from ..data.device_repartition import device_flat_columns, \
     device_rebucket_full
+from ..data.partition_store import RetiredGenerationError
 from .ir import _mix_hash, resolve_fn
 
 Columns = Dict[str, np.ndarray]
@@ -144,20 +145,31 @@ class Executor:
         stats.plan_cache_hit = cache_hit
         # Alg. 4 ran at plan time; charge it to the run that compiled the plan
         stats.match_overhead_s = 0.0 if cache_hit else plan.match_overhead_s
-        # Validate every generation pin BEFORE any step runs: a stale plan
-        # fails fast with no side effects, so plan_and_execute can re-plan
-        # and retry safely even for workloads that write.
-        if plan.pinned:
-            for step in plan.steps:
-                if step.kind != "scan":
-                    continue
+        # Resolve every scanned dataset BEFORE any step runs (one snapshot,
+        # DESIGN §11): a stale plan fails fast with no side effects, so
+        # plan_and_execute can re-plan and retry safely even for workloads
+        # that write — and once execution starts, the run holds its
+        # StoredDataset objects directly, so a concurrent generation flip
+        # (or the pinned generation leaving the retention window mid-run)
+        # cannot touch an in-flight execution.
+        scans: Dict[int, Any] = {}
+        for step in plan.steps:
+            if step.kind != "scan":
+                continue
+            if plan.pinned:
                 ds = self.store.read(step.dataset)
                 if ds.generation != step.generation:
+                    # the current pointer moved past the pin; the retained
+                    # pinned generation may still resolve — prefer failing
+                    # fast so the caller re-plans against the fresh layout
                     raise StalePlanError(
                         f"plan for {plan.workload_id!r} was compiled against "
                         f"{step.dataset}@gen{step.generation} but the store "
                         f"now holds gen{ds.generation}; re-plan (Session.run "
                         "re-keys the plan cache automatically)")
+                scans[step.nid] = ds
+            else:
+                scans[step.nid] = self.store.read(step.dataset)
         io0 = self.store.io_snapshot() if hasattr(self.store,
                                                   "io_snapshot") else {}
         t_start = time.perf_counter()
@@ -170,12 +182,10 @@ class Executor:
             parents = g.parents(step.nid)
 
             if kind == "scan":
-                # read the PINNED generation (retained by the store even
-                # after a concurrent swap), so one run always observes the
-                # single consistent layout its elisions were planned for
-                ds = self.store.read(step.dataset,
-                                     generation=step.generation) \
-                    if plan.pinned else self.store.read(step.dataset)
+                # the generation resolved by the up-front snapshot (pinned
+                # plans: exactly the layout the elisions were planned for),
+                # held as an object — immune to concurrent pointer flips
+                ds = scans[step.nid]
                 flat = ds.gather()
                 dev = device_flat_columns(ds) if step.device_relay else None
                 stats.input_bytes += ds.nbytes
@@ -409,19 +419,24 @@ def plan_and_execute(planner, executor: Executor, workload, backend, *,
     the cache lookup and the executor's up-front generation check.
 
     Returns ``(vals, stats, plan)``.  The retry is side-effect-free:
-    ``Executor.execute`` validates every generation pin before running any
-    step, so a stale plan fails before any value is computed or written.
+    ``Executor.execute`` resolves and validates every scanned generation
+    before running any step, so a stale plan (or a pin that left the
+    bounded retention window under sustained background flips —
+    ``RetiredGenerationError``) fails before any value is computed or
+    written.  Together with the executor's one-snapshot read this makes a
+    background Autopilot flip invisible to callers: they only ever see a
+    complete result computed against one consistent layout (DESIGN §11).
     """
     for attempt in range(max_replans + 1):
         t0 = time.perf_counter()
-        plan, hit = planner.physical(workload, backend)
-        planning_s = time.perf_counter() - t0
         try:
+            plan, hit = planner.physical(workload, backend)
+            planning_s = time.perf_counter() - t0
             vals, stats = executor.execute(
                 plan, history=history, hooks=hooks, timestamp=timestamp,
                 workload=workload, planning_s=planning_s, cache_hit=hit)
             return vals, stats, plan
-        except StalePlanError:
+        except (StalePlanError, RetiredGenerationError):
             # the store moved under us; the next physical() re-keys
             # against the new generations and compiles a fresh plan
             if attempt == max_replans:

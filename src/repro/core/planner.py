@@ -31,6 +31,7 @@ the flipped dataset.
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -216,6 +217,11 @@ class Planner:
         self._cache: "OrderedDict[PlanKey, PhysicalPlan]" = OrderedDict()
         self._stats = {"hits": 0, "misses": 0, "evictions": 0,
                        "invalidations": 0}
+        # guards _cache and _stats: the serving tier plans from many
+        # threads against one shared planner (DESIGN §11).  Held only
+        # around the OrderedDict/counter touches — compiles run outside
+        # it, so concurrent different-key compiles proceed in parallel.
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------- logical stage --
     def logical(self, workload) -> LogicalPlan:
@@ -262,21 +268,26 @@ class Planner:
         in that window, re-key and retry."""
         for _ in range(4):
             key = self.plan_key(workload, backend)
-            plan = self._cache.get(key)
-            if plan is not None:
-                self._cache.move_to_end(key)
-                self._stats["hits"] += 1
-                return plan, True
+            with self._lock:
+                plan = self._cache.get(key)
+                if plan is not None:
+                    self._cache.move_to_end(key)
+                    self._stats["hits"] += 1
+                    return plan, True
             try:
                 plan = self.compile(self.logical(workload),
                                     self.registry.get(backend), key=key)
             except RetiredGenerationError:
                 continue      # pinned generation swapped out of retention
-            self._stats["misses"] += 1
-            self._cache[key] = plan
-            while len(self._cache) > self.cache_capacity:
-                self._cache.popitem(last=False)
-                self._stats["evictions"] += 1
+            with self._lock:
+                # two threads may compile the same key concurrently (the
+                # compile runs unlocked); last-in wins, both plans describe
+                # the identical pinned layout so either is correct
+                self._stats["misses"] += 1
+                self._cache[key] = plan
+                while len(self._cache) > self.cache_capacity:
+                    self._cache.popitem(last=False)
+                    self._stats["evictions"] += 1
             return plan, False
         raise RuntimeError(
             "store layout kept moving during planning (generations retired "
@@ -369,23 +380,26 @@ class Planner:
 
     # --------------------------------------------------------- maintenance --
     def cache_stats(self) -> Dict[str, int]:
-        return {**self._stats, "size": len(self._cache)}
+        with self._lock:
+            return {**self._stats, "size": len(self._cache)}
 
     def clear_cache(self) -> None:
-        self._cache.clear()
+        with self._lock:
+            self._cache.clear()
 
     def invalidate(self, dataset: Optional[str] = None) -> int:
         """Drop cached plans that scan ``dataset`` (all plans if None).
         Generation-keyed lookups already miss stale plans; this frees them
         eagerly (e.g. after a dataset is dropped)."""
-        if dataset is None:
-            n = len(self._cache)
-            self._cache.clear()
-        else:
-            doomed = [k for k in self._cache
-                      if any(name == dataset for name, _, _ in k.layout)]
-            for k in doomed:
-                del self._cache[k]
-            n = len(doomed)
-        self._stats["invalidations"] += n
-        return n
+        with self._lock:
+            if dataset is None:
+                n = len(self._cache)
+                self._cache.clear()
+            else:
+                doomed = [k for k in self._cache
+                          if any(name == dataset for name, _, _ in k.layout)]
+                for k in doomed:
+                    del self._cache[k]
+                n = len(doomed)
+            self._stats["invalidations"] += n
+            return n

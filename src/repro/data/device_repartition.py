@@ -54,6 +54,8 @@ gather), preserving exact bits and dtypes either way.
 
 from __future__ import annotations
 
+import threading
+
 from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
@@ -331,6 +333,11 @@ class ShufflePlan:
 _PLANS: "OrderedDict[Tuple, ShufflePlan]" = OrderedDict()
 _PLAN_CACHE_CAPACITY = 64
 _RETIRED = {"plans": 0, "traces": 0, "calls": 0}
+# Guards _PLANS/_RETIRED: the serving tier dispatches shuffles from many
+# threads (DESIGN §11); an unguarded OrderedDict corrupts under concurrent
+# get/move_to_end/popitem.  Cheap — plan *lookup* is a dict hit; the jit
+# trace itself happens lazily at first call, outside this lock.
+_PLANS_LOCK = threading.RLock()
 
 
 def plan_cache_stats() -> Dict[str, int]:
@@ -338,28 +345,31 @@ def plan_cache_stats() -> Dict[str, int]:
     the live-plan count; ``traces``/``calls`` include evicted plans so a flat
     ``traces`` across repeated same-shape shuffles stays the no-retrace
     guarantee even after LRU turnover."""
-    return {"plans": len(_PLANS),
-            "traces": sum(p.traces for p in _PLANS.values())
-            + _RETIRED["traces"],
-            "calls": sum(p.calls for p in _PLANS.values())
-            + _RETIRED["calls"],
-            "evictions": _RETIRED["plans"]}
+    with _PLANS_LOCK:
+        return {"plans": len(_PLANS),
+                "traces": sum(p.traces for p in _PLANS.values())
+                + _RETIRED["traces"],
+                "calls": sum(p.calls for p in _PLANS.values())
+                + _RETIRED["calls"],
+                "evictions": _RETIRED["plans"]}
 
 
 def reset_plan_cache_stats() -> None:
     """Zero the trace/call counters without dropping any compiled plan —
     the companion to :func:`plan_cache_stats` for a long-lived service that
     wants per-window "did anything retrace?" checks."""
-    for p in _PLANS.values():
-        p.traces = 0
-        p.calls = 0
-    _RETIRED.update(plans=0, traces=0, calls=0)
+    with _PLANS_LOCK:
+        for p in _PLANS.values():
+            p.traces = 0
+            p.calls = 0
+        _RETIRED.update(plans=0, traces=0, calls=0)
 
 
 def clear_plan_cache() -> None:
     """Drop every plan and all counters (tests start from a clean slate)."""
-    _PLANS.clear()
-    _RETIRED.update(plans=0, traces=0, calls=0)
+    with _PLANS_LOCK:
+        _PLANS.clear()
+        _RETIRED.update(plans=0, traces=0, calls=0)
 
 
 def set_plan_cache_capacity(capacity: int) -> None:
@@ -367,8 +377,9 @@ def set_plan_cache_capacity(capacity: int) -> None:
     global _PLAN_CACHE_CAPACITY
     if capacity < 1:
         raise ValueError("plan cache capacity must be >= 1")
-    _PLAN_CACHE_CAPACITY = capacity
-    _evict_to_capacity()
+    with _PLANS_LOCK:
+        _PLAN_CACHE_CAPACITY = capacity
+        _evict_to_capacity()
 
 
 def plan_cache_capacity() -> int:
@@ -376,6 +387,7 @@ def plan_cache_capacity() -> int:
 
 
 def _evict_to_capacity() -> None:
+    # caller holds _PLANS_LOCK
     while len(_PLANS) > _PLAN_CACHE_CAPACITY:
         _key, plan = _PLANS.popitem(last=False)
         _RETIRED["plans"] += 1
@@ -385,15 +397,19 @@ def _evict_to_capacity() -> None:
 
 def _get_plan(key: Tuple, build: Callable[[ShufflePlan], Callable]
               ) -> ShufflePlan:
-    plan = _PLANS.get(key)
-    if plan is None:
-        plan = ShufflePlan(key=key)
-        plan.fn = jax.jit(build(plan))
-        _PLANS[key] = plan
-        _evict_to_capacity()
-    else:
-        _PLANS.move_to_end(key)
-    return plan
+    with _PLANS_LOCK:
+        plan = _PLANS.get(key)
+        if plan is None:
+            # building the wrapper is cheap (jax.jit is lazy); the actual
+            # trace happens at first call, outside the lock — concurrent
+            # first calls of one plan serialize inside jax, trace once
+            plan = ShufflePlan(key=key)
+            plan.fn = jax.jit(build(plan))
+            _PLANS[key] = plan
+            _evict_to_capacity()
+        else:
+            _PLANS.move_to_end(key)
+        return plan
 
 
 def _fused_rebucket_plan(m: int, B: int, spec: Tuple, interpret: bool,

@@ -30,6 +30,7 @@ lazily rehydrate, and a device-resident store prefetches host→device.
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field
@@ -186,14 +187,28 @@ class PartitionStore:
         # so in-flight readers and audits can still resolve them by number.
         self.max_retired_generations = max_retired_generations
         self._retired: Dict[str, List[StoredDataset]] = {}
+        # Concurrency contract (DESIGN §11): the name→StoredDataset pointer
+        # flip is one dict assignment, so READS ARE LOCK-FREE — a reader
+        # resolves the current generation with a plain dict lookup and then
+        # owns an immutable object.  ``_swap_lock`` is the writer side: it
+        # serializes pointer flips, retired-list maintenance and container
+        # swaps (spill/prefetch) so writers never interleave, while readers
+        # never wait.
         self._swap_lock = threading.Lock()
         self._install_locks: Dict[str, threading.Lock] = {}
+        self._log_lock = threading.Lock()
+        self._evict_lock = threading.Lock()
+        # test-only injectable sync points (tests/test_serving_races.py):
+        # named callables invoked at the store's sharp edges so races are
+        # reproduced deterministically with events, not sleeps.  Empty dict
+        # in production — one dict lookup per crossing, no locking.
+        self._sync_points: Dict[str, Callable[[], None]] = {}
         # durable tier (DESIGN §10)
         self.autoflush = autoflush
         self.memory_budget_bytes = memory_budget_bytes
         self._dirty: set = set()
         self._last_access: Dict[str, int] = {}
-        self._access_clock = 0
+        self._access_clock = itertools.count(1)
         self.durable = None
         if root is not None:
             from .storage.durable import DurableStore
@@ -231,20 +246,42 @@ class PartitionStore:
 
     def _log_write(self, entry: Dict[str, Any]) -> None:
         """Append a write_log row, folding overflow into the monotone
-        aggregates so the log stays bounded under sustained traffic."""
-        self.write_log.append(entry)
-        t = self.write_totals
-        t["entries"] += 1
-        t["rows"] += int(entry.get("rows", 0))
-        t["bytes"] += int(entry.get("bytes", 0))
-        t["latency_s"] += float(entry.get("latency", 0.0))
-        while len(self.write_log) > self.write_log_cap:
-            self.write_log.pop(0)
-            t["evicted"] += 1
+        aggregates so the log stays bounded under sustained traffic.
+        Serialized: concurrent writers (the serving tier) must not lose
+        counter increments to read-modify-write races."""
+        with self._log_lock:
+            self.write_log.append(entry)
+            t = self.write_totals
+            t["entries"] += 1
+            t["rows"] += int(entry.get("rows", 0))
+            t["bytes"] += int(entry.get("bytes", 0))
+            t["latency_s"] += float(entry.get("latency", 0.0))
+            while len(self.write_log) > self.write_log_cap:
+                self.write_log.pop(0)
+                t["evicted"] += 1
 
     def write_stats(self) -> Dict[str, float]:
         """Cumulative write counters (monotone across write_log eviction)."""
-        return dict(self.write_totals)
+        with self._log_lock:
+            return dict(self.write_totals)
+
+    # -- test-only race instrumentation (DESIGN §11) -------------------------
+    def set_sync_point(self, point: str,
+                       fn: Optional[Callable[[], None]]) -> None:
+        """Install (or with ``None`` remove) a callable invoked when store
+        internals cross ``point`` — e.g. ``install:pre_flip``,
+        ``spill:column`` — so concurrency tests reproduce interleavings
+        deterministically with :class:`threading.Event` barriers instead of
+        sleeps.  Production stores never set these."""
+        if fn is None:
+            self._sync_points.pop(point, None)
+        else:
+            self._sync_points[point] = fn
+
+    def _sync(self, point: str) -> None:
+        fn = self._sync_points.get(point)
+        if fn is not None:
+            fn()
 
     def _name_lock(self, name: str) -> threading.Lock:
         with self._swap_lock:
@@ -272,6 +309,7 @@ class PartitionStore:
                     self._dirty.discard(name)
                 else:
                     self._dirty.add(name)
+            self._sync("install:pre_flip")
             with self._swap_lock:
                 if prev is not None:
                     retired = self._retired.setdefault(name, [])
@@ -280,6 +318,7 @@ class PartitionStore:
                         del retired[:len(retired)
                                     - self.max_retired_generations]
                 self.datasets[name] = ds
+            self._sync("install:post_flip")
         self._touch(name)
         self._maybe_evict()
         return ds
@@ -294,10 +333,12 @@ class PartitionStore:
         No-op (0) on a memory-only store."""
         if self.durable is None:
             return 0
-        names = [name] if name is not None else sorted(self.datasets)
+        names = [name] if name is not None else sorted(list(self.datasets))
         published = 0
         for n in names:
-            ds = self.datasets[n]
+            ds = self.datasets.get(n)
+            if ds is None:
+                continue
             if n in self._dirty or not self.durable.has_generation(
                     n, ds.generation):
                 self.durable.persist(ds)
@@ -310,25 +351,39 @@ class PartitionStore:
         The executor diffs this around a run to attribute storage I/O."""
         if self.durable is None:
             return {}
-        return dict(self.durable.io_stats)
+        return self.durable.io_snapshot()
 
     # -- eviction loop ---------------------------------------------------------
     def _touch(self, name: str) -> None:
-        self._access_clock += 1
-        self._last_access[name] = self._access_clock
+        # itertools.count is a single C-level op — atomic under the GIL, so
+        # concurrent readers never lose a tick (LRU stays consistent)
+        self._last_access[name] = next(self._access_clock)
 
     def resident_bytes(self) -> int:
         """Bytes of column data currently held in RAM/device memory (spilled
         memmap views count as 0 — they are disk-backed).  Retired-but-
         retained generations count too: they hold real memory until their
         retention window closes."""
+        with self._swap_lock:
+            # snapshot under the writer lock: a concurrent install/retire
+            # must not resize these containers mid-iteration
+            live = list(self.datasets.values())
+            retired = [d for lst in self._retired.values() for d in lst]
         total = 0
-        retired = [d for lst in self._retired.values() for d in lst]
-        for ds in list(self.datasets.values()) + retired:
-            for v in ds.columns.values():
+        for ds in live + retired:
+            for v in list(ds.columns.values()):
                 if not isinstance(v, np.memmap):
                     total += int(v.nbytes)
         return total
+
+    def namespace_bytes(self, prefix: str = "") -> int:
+        """Logical bytes of every current-generation dataset whose name
+        starts with ``prefix`` — the serving tier's per-tenant accounting
+        (tenants own disjoint name prefixes, DESIGN §11)."""
+        with self._swap_lock:
+            live = [d for n, d in self.datasets.items()
+                    if n.startswith(prefix)]
+        return int(sum(d.nbytes for d in live))
 
     def is_spilled(self, name: str) -> bool:
         return self.datasets[name].spilled
@@ -340,26 +395,37 @@ class PartitionStore:
         on a memory-only store."""
         if self.durable is None:
             return False
-        ds = self.datasets[name]
-        if ds.spilled:
-            return True
-        self.flush(name)
-        man = self.durable.load_manifest(name, ds.generation)
-        if man is None:                  # validation failed — keep resident
-            return False
-        return self._swap_to_segments(ds, man)
+        # the per-name lock serializes spill against a concurrent _install
+        # of the same dataset (the generation sequence stays linear); other
+        # datasets' writers are unaffected
+        with self._name_lock(name):
+            ds = self.datasets[name]
+            if ds.spilled:
+                return True
+            self.flush(name)
+            man = self.durable.load_manifest(name, ds.generation)
+            if man is None:              # validation failed — keep resident
+                return False
+            return self._swap_to_segments(ds, man)
 
     def _swap_to_segments(self, ds: StoredDataset, man) -> bool:
         """Replace ``ds``'s column containers with memmap views of their
-        persisted segments (same bits, shared by every reader)."""
-        freed = sum(int(v.nbytes) for v in ds.columns.values()
+        persisted segments (same bits, shared by every reader).
+
+        Each column flips under the writer lock individually; a reader
+        mid-``gather()`` may observe some columns in RAM and some as
+        memmap views — bit-identical by construction, so the immutable-
+        values contract holds (the ``spill:column`` sync point lets the
+        race tests freeze exactly that mixed state)."""
+        freed = sum(int(v.nbytes) for v in list(ds.columns.values())
                     if not isinstance(v, np.memmap))
         cols = self.durable.open_columns(ds.name, man)
-        with self._swap_lock:
-            for k in list(ds.columns):
+        for k in list(ds.columns):
+            self._sync("spill:column")
+            with self._swap_lock:
                 ds.columns[k] = cols[k]
-        self.durable.io_stats["spills"] += 1
-        self.durable.io_stats["spilled_bytes"] += freed
+        self._sync("spill:post_swap")
+        self.durable.io_add(spills=1, spilled_bytes=freed)
         return True
 
     def _spill_retired(self) -> int:
@@ -384,29 +450,29 @@ class PartitionStore:
         """Promote a spilled dataset back to residency: in-RAM copies on a
         host store, device arrays (host→device prefetch) on a
         device-resident one.  Returns True when the dataset is resident."""
-        ds = self.datasets[name]
-        if not ds.spilled:
-            return True
-        t0 = time.perf_counter()
-        loaded = 0
-        promoted: Columns = {}
-        for k, v in ds.columns.items():
-            arr = np.array(v)            # one sequential segment read
-            loaded += int(arr.nbytes)
-            if self._storage_prefetch:
-                promoted[k] = jax.numpy.asarray(arr) \
-                    if dtype_roundtrips(arr.dtype) else arr
-            else:
-                promoted[k] = arr
-        with self._swap_lock:
-            for k in list(ds.columns):
-                ds.columns[k] = promoted[k]
-        if self.durable is not None:
-            io = self.durable.io_stats
-            io["bytes_read"] += loaded
-            io["read_s"] += time.perf_counter() - t0
-            io["rehydrations"] += 1
-            io["rehydrated_bytes"] += loaded
+        with self._name_lock(name):
+            ds = self.datasets[name]
+            if not ds.spilled:
+                return True
+            t0 = time.perf_counter()
+            loaded = 0
+            promoted: Columns = {}
+            for k, v in list(ds.columns.items()):
+                arr = np.array(v)        # one sequential segment read
+                loaded += int(arr.nbytes)
+                if self._storage_prefetch:
+                    promoted[k] = jax.numpy.asarray(arr) \
+                        if dtype_roundtrips(arr.dtype) else arr
+                else:
+                    promoted[k] = arr
+            self._sync("prefetch:pre_swap")
+            with self._swap_lock:
+                for k in list(ds.columns):
+                    ds.columns[k] = promoted[k]
+            if self.durable is not None:
+                self.durable.io_add(bytes_read=loaded,
+                                    read_s=time.perf_counter() - t0,
+                                    rehydrations=1, rehydrated_bytes=loaded)
         self._touch(name)
         self._maybe_evict(exclude=name)
         return True
@@ -417,23 +483,34 @@ class PartitionStore:
         tier; a memory-only store never spills."""
         if self.memory_budget_bytes is None or self.durable is None:
             return 0
-        spilled = 0
-        if self.resident_bytes() > self.memory_budget_bytes:
-            spilled += self._spill_retired()
-        while self.resident_bytes() > self.memory_budget_bytes:
-            before = self.resident_bytes()
-            victims = sorted(
-                (n for n, d in self.datasets.items()
-                 if not d.spilled and n != exclude),
-                key=lambda n: self._last_access.get(n, 0))
-            if not victims:
-                break
-            if not self.spill(victims[0]):
-                break
-            spilled += 1
-            if self.resident_bytes() >= before:
-                break                    # no progress (e.g. 0-size columns)
-        return spilled
+        # one evictor at a time: concurrent budget-crossers skip instead of
+        # queueing up to spill the same victims (the holder restores the
+        # invariant for everyone)
+        if not self._evict_lock.acquire(blocking=False):
+            return 0
+        try:
+            spilled = 0
+            if self.resident_bytes() > self.memory_budget_bytes:
+                spilled += self._spill_retired()
+            while self.resident_bytes() > self.memory_budget_bytes:
+                before = self.resident_bytes()
+                with self._swap_lock:
+                    candidates = [(n, d.spilled)
+                                  for n, d in self.datasets.items()]
+                victims = sorted(
+                    (n for n, is_spilled in candidates
+                     if not is_spilled and n != exclude),
+                    key=lambda n: self._last_access.get(n, 0))
+                if not victims:
+                    break
+                if not self.spill(victims[0]):
+                    break
+                spilled += 1
+                if self.resident_bytes() >= before:
+                    break                # no progress (e.g. 0-size columns)
+            return spilled
+        finally:
+            self._evict_lock.release()
 
     # -- write path (storage-time partitioning) ------------------------------
     def write(self, name: str, data: Columns,
@@ -547,14 +624,24 @@ class PartitionStore:
 
         On a device-resident durable store, reading a spilled dataset
         prefetches it host→device first (DESIGN §10); a host store reads
-        straight through the memmap views (lazy page-in)."""
+        straight through the memmap views (lazy page-in).
+
+        Thread-safety (DESIGN §11): the current-generation hot path is
+        LOCK-FREE — one dict lookup resolves an immutable StoredDataset,
+        and a concurrent ``_install`` pointer flip is invisible to a reader
+        that already resolved (generations are never mutated in place).
+        Only the retired-generation fallback briefly takes the writer lock
+        to snapshot the retention list."""
         ds = self.datasets[name]
         if generation is None or ds.generation == generation:
             self._touch(name)
             if self._storage_prefetch and ds.spilled:
                 self.prefetch(name)
-            return self.datasets[name]
-        for old in reversed(self._retired.get(name, [])):
+                return self.datasets.get(name, ds)
+            return ds
+        with self._swap_lock:
+            retained = list(self._retired.get(name, ()))
+        for old in reversed(retained):
             if old.generation == generation:
                 return old
         if self.durable is not None:
@@ -569,7 +656,8 @@ class PartitionStore:
             f"{self.max_retired_generations})")
 
     def stored_partitioners(self) -> Dict[str, Optional[PartitionerCandidate]]:
-        return {n: d.partitioner for n, d in self.datasets.items()}
+        with self._swap_lock:
+            return {n: d.partitioner for n, d in self.datasets.items()}
 
     # -- shuffle (the operation Lachesis exists to avoid) ------------------------
     def repartition(self, ds: StoredDataset,

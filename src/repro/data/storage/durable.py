@@ -27,6 +27,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import threading
 import time
 from typing import Any, Dict, List, Optional
 from urllib.parse import quote, unquote
@@ -66,6 +67,9 @@ class DurableStore:
         self.root = os.path.abspath(root)
         self.max_retired_generations = int(max_retired_generations)
         self.io_stats: Dict[str, float] = _io_zero()
+        # serializes io_stats read-modify-writes: many serving threads
+        # meter I/O concurrently and must not lose increments
+        self._io_lock = threading.Lock()
         os.makedirs(os.path.join(self.root, "datasets"), exist_ok=True)
         self.catalog = self._load_or_init_catalog(num_workers)
 
@@ -90,6 +94,16 @@ class DurableStore:
                "created_at": time.time()}
         atomic_write_text(self.catalog_path, json.dumps(cat, indent=1))
         return cat
+
+    def io_add(self, **deltas: float) -> None:
+        """Atomically add to the I/O counters (thread-safe metering)."""
+        with self._io_lock:
+            for k, v in deltas.items():
+                self.io_stats[k] += v
+
+    def io_snapshot(self) -> Dict[str, float]:
+        with self._io_lock:
+            return dict(self.io_stats)
 
     @property
     def num_workers(self) -> Optional[int]:
@@ -132,7 +146,7 @@ class DurableStore:
         for k, v in ds.columns.items():
             written += write_segment(os.path.join(gdir, segment_filename(k)),
                                      np.asarray(v))
-            self.io_stats["segments_written"] += 1
+            self.io_add(segments_written=1)
         fsync_dir(gdir)
         prev = load_manifest(ds_dir, ds.generation - 1) \
             if ds.generation > 0 else None
@@ -145,9 +159,9 @@ class DurableStore:
             atomic_write_text(
                 os.path.join(ds_dir, manifest_filename(man.generation)),
                 man.to_json())
-        self.io_stats["bytes_written"] += written
-        self.io_stats["write_s"] += time.perf_counter() - t0
-        self.io_stats["generations_published"] += 1
+        self.io_add(bytes_written=written,
+                    write_s=time.perf_counter() - t0,
+                    generations_published=1)
         return man
 
     def _gc(self, ds_dir: str, current_gen: int) -> None:
@@ -192,7 +206,7 @@ class DurableStore:
             return None
         t0 = time.perf_counter()
         cols = self.open_columns(name, man)
-        self.io_stats["read_s"] += time.perf_counter() - t0
+        self.io_add(read_s=time.perf_counter() - t0)
         return StoredDataset(
             name=man.name, columns=cols,
             counts=np.asarray(man.counts, np.int64),

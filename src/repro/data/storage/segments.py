@@ -17,6 +17,7 @@ orphaned temp/partial file that validation ignores.
 from __future__ import annotations
 
 import os
+import threading
 from typing import Tuple
 
 import numpy as np
@@ -42,9 +43,14 @@ def fsync_dir(path: str) -> None:
 
 def write_segment(path: str, array: np.ndarray) -> int:
     """Persist ``array``'s bytes at ``path`` (temp + fsync + atomic rename).
-    Returns the byte count written."""
+    Returns the byte count written.
+
+    The temp name is unique per writing thread: two threads racing to
+    persist the same (name, generation) — a ``flush()`` against a
+    concurrent spill — each complete their own temp file and the renames
+    commute (same bits), instead of interleaving writes into one temp."""
     arr = np.ascontiguousarray(np.asarray(array))
-    tmp = path + ".tmp"
+    tmp = f"{path}.{os.getpid()}-{threading.get_ident()}.tmp"
     with open(tmp, "wb") as f:
         f.write(arr.tobytes())
         f.flush()

@@ -1,4 +1,10 @@
-"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+"""Batched LM serving driver: prefill a batch of prompts, decode N tokens.
+
+This is the *model inference* driver for the LM workload suite.  The
+serving tier for the analytics engine itself — concurrent workloads over
+one shared PartitionStore, with admission control, request coalescing and
+per-tenant namespaces — lives in ``repro.service.serving``
+(``Session.serve()``, DESIGN §11), not here.
 
 CPU-scale usage (examples/serve_batch.py):
     python -m repro.launch.serve --arch internlm2-1.8b --reduced \

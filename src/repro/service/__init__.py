@@ -3,6 +3,7 @@
 #   cost_model — what-if layout scoring from measured shuffle throughput
 #   optimizer  — the tick()/background decide→apply loop + Autopilot facade
 #   drivers    — deterministic workload-drift scenarios (tests/bench/demo)
+#   serving    — concurrent frontend: admission, coalescing, tenancy (§11)
 
 from .observer import LogicalClock, Observer
 from .cost_model import Calibration, LayoutScore, WhatIfCostModel
@@ -11,3 +12,5 @@ from .optimizer import (AppliedDecision, Autopilot, AutopilotConfig,
 from .drivers import (DriftScenarioReport, aggregate_result,
                       default_drift_config, drift_tables, q_orderkey,
                       q_partkey, run_drift_scenario)
+from .serving import (AdmissionError, NamespacedWorkload, ServeTicket,
+                      ServingFrontend, Tenant, TenantBudgetError, TENANT_SEP)

@@ -1,0 +1,509 @@
+"""Race-hunting tests for the serving tier (DESIGN §11).
+
+One shared PartitionStore, many live clients, a background writer flipping
+layout generations — the invariant throughout is *serial equivalence*:
+every concurrent result must be bit-identical to the same workload run
+serially, no errors, no partial layouts observed.  Covers:
+
+* 16 concurrent clients vs one store while generations flip underneath
+  (both a raw repartition loop and a real background Autopilot);
+* coalescing: identical queued requests share one execution, and a
+  generation flip splits coalescing groups (never crosses layouts);
+* plan-cache thrash: capacity-2 planner + ShufflePlan caches under
+  concurrent distinct workloads stay correct and bounded;
+* tenant isolation: one tenant's budget exhaustion or failing UDF cannot
+  fail another tenant's traffic;
+* hypothesis-driven reader/writer/evictor interleavings over a durable
+  budget-bound store.
+"""
+
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+import repro.data.device_repartition as dr
+from repro.api import Session
+from repro.core.dsl import Workload
+from repro.core.partitioner import enumerate_candidates
+from repro.data.partition_store import PartitionStore
+from repro.service import (AdmissionError, TenantBudgetError,
+                           aggregate_result, drift_tables)
+from repro.service.observer import LogicalClock
+
+
+# ---------------------------------------------------------------------------
+# read-only variants of the drift mix (no write node => coalescable)
+# ---------------------------------------------------------------------------
+
+def q_orderkey_ro() -> Workload:
+    wl = Workload("q-orderkey-ro")
+    li = wl.scan("lineitem")
+    od = wl.scan("orders")
+    j = wl.join(li, od, left_key=li["orderkey"], right_key=od["orderkey"],
+                tag="li_orders")
+    wl.aggregate(j, key=j["odate"], reducer="sum")
+    return wl
+
+
+def q_partkey_ro() -> Workload:
+    wl = Workload("q-partkey-ro")
+    li = wl.scan("lineitem")
+    pt = wl.scan("part")
+    j = wl.join(li, pt, left_key=li["partkey"], right_key=pt["partkey"],
+                tag="li_part")
+    wl.aggregate(j, key=j["size"], reducer="sum")
+    return wl
+
+
+def _seed_session(max_retired_generations: int = 2, **kw) -> Session:
+    store = PartitionStore(num_workers=4, backend="host",
+                           max_retired_generations=max_retired_generations)
+    sess = Session(store, **kw)
+    for name, data in drift_tables(n_lineitem=3000, n_orders=800,
+                                   n_parts=200).items():
+        sess.write(name, data)
+    return sess
+
+
+def _expected(sess: Session):
+    """Serial baselines — layout-independent by construction (integer-
+    valued float payloads, canonical key-sorted aggregate)."""
+    return {
+        "ok": aggregate_result(sess.run(q_orderkey_ro()).values,
+                               q_orderkey_ro()),
+        "pk": aggregate_result(sess.run(q_partkey_ro()).values,
+                               q_partkey_ro()),
+    }
+
+
+def _assert_same(got, want):
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+        assert got[k].dtype == want[k].dtype
+
+
+def _lineitem_candidates(store: PartitionStore):
+    """Two genuinely different keyed layouts for lineitem (orderkey via
+    the Q04 graph, partkey via the Q17 graph) — alternating them flips
+    generations AND changes partitioner signatures/plan keys."""
+    ok = enumerate_candidates(q_orderkey_ro().graph, "lineitem")[0]
+    pk = enumerate_candidates(q_partkey_ro().graph, "lineitem")[0]
+    return [ok, pk]
+
+
+# ---------------------------------------------------------------------------
+# the headline stress: 16 clients, background flips, serial equivalence
+# ---------------------------------------------------------------------------
+
+def test_sixteen_clients_bit_identical_under_background_flips():
+    # generous retention: queued plans pin generations while the flipper
+    # publishes new ones; pins must stay resolvable for the whole queue
+    sess = _seed_session(max_retired_generations=16)
+    want = _expected(sess)
+    front = sess.serve(max_workers=16, max_queue=256)
+
+    cands = _lineitem_candidates(sess.store)
+    stop = threading.Event()
+    flips = []
+
+    def flipper():
+        i = 0
+        while not stop.is_set():
+            cand = cands[i % 2]
+            new, _ = sess.store.repartition(sess.store.read("lineitem"),
+                                            cand, swap=True)
+            flips.append(new.generation)
+            i += 1
+
+    errors = []
+
+    def client(cid):
+        try:
+            for j in range(6):
+                ro = q_orderkey_ro() if (cid + j) % 2 else q_partkey_ro()
+                key = "ok" if (cid + j) % 2 else "pk"
+                # half the traffic opts out of coalescing so executions
+                # genuinely overlap; the other half exercises sharing
+                res = front.run(ro, coalesce=bool(cid % 2), timeout=120,
+                                block=True)
+                _assert_same(aggregate_result(res.values, ro), want[key])
+        except BaseException as e:      # noqa: BLE001
+            errors.append((cid, e))
+
+    flip_t = threading.Thread(target=flipper, daemon=True)
+    flip_t.start()
+    clients = [threading.Thread(target=client, args=(c,)) for c in range(16)]
+    for t in clients:
+        t.start()
+    for t in clients:
+        t.join(timeout=300)
+    stop.set()
+    flip_t.join(timeout=60)
+
+    assert not errors, f"concurrent serves failed: {errors[:3]}"
+    assert len(flips) >= 2, "flipper never flipped — stress was vacuous"
+    st = front.stats()
+    assert st["failed"] == 0
+    assert st["completed"] >= 16       # >= one execution per client batch
+    front.close()
+
+
+def test_serving_with_real_background_autopilot():
+    """The integration the tier exists for: live traffic while an attached
+    Autopilot autonomously observes, decides and swaps layouts."""
+    sess = _seed_session(max_retired_generations=16)
+    want = _expected(sess)
+    ap = sess.autopilot(clock=LogicalClock())
+    front = sess.serve(max_workers=8, max_queue=128)
+
+    # prime the history so the optimizer has something to act on
+    for _ in range(3):
+        front.run(q_orderkey_ro(), timeout=120, block=True)
+    ap.start(period_s=0.02)
+    try:
+        errors = []
+
+        def client(cid):
+            try:
+                for _ in range(4):
+                    res = front.run(q_orderkey_ro(), coalesce=False,
+                                    timeout=120, block=True)
+                    _assert_same(aggregate_result(res.values,
+                                                  q_orderkey_ro()),
+                                 want["ok"])
+            except BaseException as e:  # noqa: BLE001
+                errors.append((cid, e))
+
+        clients = [threading.Thread(target=client, args=(c,))
+                   for c in range(8)]
+        for t in clients:
+            t.start()
+        for t in clients:
+            t.join(timeout=300)
+        assert not errors, f"serves failed under autopilot: {errors[:3]}"
+    finally:
+        ap.stop()
+        front.close()
+    # the autopilot actually moved the layout at least once
+    applied = [d for r in ap.optimizer.reports for d in r.applied]
+    assert applied, "autopilot never applied a decision — stress vacuous"
+    assert front.stats()["failed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# coalescing semantics
+# ---------------------------------------------------------------------------
+
+def test_coalescing_shares_one_execution():
+    sess = _seed_session()
+    want = _expected(sess)["ok"]
+
+    # one worker held on a gated filler keeps the coalescing leader
+    # *queued* while the followers arrive — the pile-on is deterministic
+    front = sess.serve(max_workers=1, max_queue=64)
+    gate = threading.Event()
+    filler = Workload("filler")
+    x = filler.scan("lineitem")
+    filler.map(x, lambda c: (gate.wait(60), {"k": c["orderkey"]})[1],
+               tag="gated")
+    f = front.submit(filler)
+    wl = q_orderkey_ro()
+    tickets = [front.submit(wl) for _ in range(12)]
+    gate.set()
+    f.result(120)
+    results = [t.result(120) for t in tickets]
+    assert len({id(t) for t in tickets}) == 1, \
+        "identical queued requests must share one ticket"
+    for r in results:
+        _assert_same(aggregate_result(r.values, wl), want)
+    st = front.stats()
+    assert st["coalesced"] == 11 and st["admitted"] == 2
+    front.close()
+
+
+def test_generation_flip_splits_coalescing_groups():
+    sess = _seed_session()
+    front = sess.serve(max_workers=4, max_queue=64)
+    wl = q_orderkey_ro()
+    t1 = front.submit(wl)
+    t1.result(120)
+
+    cand = _lineitem_candidates(sess.store)[0]
+    sess.store.repartition(sess.store.read("lineitem"), cand, swap=True)
+
+    t2 = front.submit(wl)
+    t2.result(120)
+    # the plan-cache key pins layout generations: a flip between the two
+    # submissions must produce distinct coalescing identities
+    assert t1.key != t2.key
+    _assert_same(aggregate_result(t2.result().values, wl),
+                 aggregate_result(t1.result().values, wl))
+    front.close()
+
+
+def test_write_workloads_never_coalesce():
+    sess = _seed_session()
+    front = sess.serve(max_workers=4, max_queue=64)
+    wl = Workload("writer")
+    x = wl.scan("lineitem")
+    agg = wl.aggregate(x, key=x["orderkey"], reducer="sum")
+    wl.write(agg, "out")
+    t1 = front.submit(wl)
+    t2 = front.submit(wl)
+    t1.result(120)
+    t2.result(120)
+    assert t1 is not t2 and t1.key is None and t2.key is None
+    assert front.stats()["coalesced"] == 0
+    front.close()
+
+
+# ---------------------------------------------------------------------------
+# admission / backpressure
+# ---------------------------------------------------------------------------
+
+def test_admission_queue_full_rejects_then_recovers():
+    sess = _seed_session()
+    front = sess.serve(max_workers=1, max_queue=1, coalesce=False)
+    gate = threading.Event()
+
+    def slow(wid):
+        wl = Workload(f"slow-{wid}")
+        x = wl.scan("lineitem")
+        wl.map(x, lambda c: (gate.wait(60), {"k": c["orderkey"]})[1],
+               tag="gated")
+        return wl
+
+    a = front.submit(slow(0))     # running, parked on the gate
+    b = front.submit(slow(1))     # occupies the one waiting slot
+    with pytest.raises(AdmissionError):
+        front.submit(slow(2))     # both slots held -> backpressure
+    gate.set()
+    a.result(120)
+    b.result(120)
+    # slots drained -> admission works again
+    front.submit(slow(3)).result(120)
+    st = front.stats()
+    assert st["rejected"] == 1 and st["failed"] == 0
+    front.close()
+
+
+# ---------------------------------------------------------------------------
+# plan-cache thrash: tiny caches, concurrent distinct workloads
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_thrash_capacity_two():
+    sess = _seed_session(plan_cache_capacity=2)
+    want = _expected(sess)
+    old_cap = dr.plan_cache_capacity()
+    dr.set_plan_cache_capacity(2)
+    try:
+        front = sess.serve(max_workers=8, max_queue=128)
+        errors = []
+
+        def client(cid):
+            try:
+                for j in range(5):
+                    ro = q_orderkey_ro() if (cid + j) % 2 else q_partkey_ro()
+                    key = "ok" if (cid + j) % 2 else "pk"
+                    res = front.run(ro, coalesce=False, timeout=120,
+                                    block=True)
+                    _assert_same(aggregate_result(res.values, ro), want[key])
+            except BaseException as e:  # noqa: BLE001
+                errors.append((cid, e))
+
+        clients = [threading.Thread(target=client, args=(c,))
+                   for c in range(8)]
+        for t in clients:
+            t.start()
+        for t in clients:
+            t.join(timeout=300)
+        assert not errors, f"thrash failures: {errors[:3]}"
+        st = sess.plan_cache_stats()
+        assert st["size"] <= 2
+        # counters stay monotone and sane across concurrent eviction
+        assert st["hits"] >= 0 and st["misses"] >= 1
+        assert dr.plan_cache_stats()["plans"] <= 2
+        front.close()
+    finally:
+        dr.set_plan_cache_capacity(old_cap)
+
+
+# ---------------------------------------------------------------------------
+# tenancy: budgets and fault isolation
+# ---------------------------------------------------------------------------
+
+def _tenant_tables():
+    rng = np.random.default_rng(7)
+    return {"k": rng.integers(0, 40, 3000),
+            "v": rng.integers(0, 100, 3000).astype(np.float64)}
+
+
+def _tenant_query(tenant):
+    wl = tenant.workload()
+    x = wl.scan("t")
+    wl.aggregate(x, key=x["k"], reducer="sum")
+    return wl
+
+
+def test_tenant_budget_exhaustion_is_isolated():
+    sess = Session(num_workers=4)
+    front = sess.serve(max_workers=4, max_queue=32)
+    data = _tenant_tables()
+    alice = front.tenant("alice", memory_budget_bytes=1 << 16)
+    bob = front.tenant("bob")
+    alice.write("t", data)
+    bob.write("t", data)
+    want = aggregate_result(bob.run(_tenant_query(bob), timeout=120).values,
+                            _tenant_query(bob))
+
+    with pytest.raises(TenantBudgetError):
+        alice.write("big", {"x": np.zeros(1 << 16)})
+    # the rejected write left no trace in the shared store
+    assert not any(n.endswith("big") for n in sess.store.datasets)
+    # ...and bob's traffic is entirely unaffected
+    got = aggregate_result(bob.run(_tenant_query(bob), timeout=120).values,
+                           _tenant_query(bob))
+    _assert_same(got, want)
+    # alice can still serve reads within budget
+    alice.run(_tenant_query(alice), timeout=120)
+    front.close()
+
+
+def test_tenant_bad_udf_fails_only_its_ticket():
+    sess = Session(num_workers=4)
+    front = sess.serve(max_workers=4, max_queue=32)
+    data = _tenant_tables()
+    alice = front.tenant("alice")
+    bob = front.tenant("bob")
+    alice.write("t", data)
+    bob.write("t", data)
+
+    bad = alice.workload()
+    x = bad.scan("t")
+    bad.map(x, lambda c: {"z": c["no_such_column"]}, tag="bad")
+    bad_t = alice.submit(bad)
+    good_ts = [bob.submit(_tenant_query(bob), block=True) for _ in range(6)]
+
+    with pytest.raises(KeyError):
+        bad_t.result(120)
+    for t in good_ts:
+        t.result(120)                  # no cross-tenant fallout
+    st = front.stats()
+    assert st["failed"] == 1
+    front.close()
+
+
+def test_tenant_namespaces_are_disjoint_in_shared_store():
+    sess = Session(num_workers=4)
+    front = sess.serve()
+    a, b = front.tenant("alice"), front.tenant("bob")
+    a.write("t", {"k": np.arange(10), "v": np.ones(10)})
+    b.write("t", {"k": np.arange(20), "v": np.ones(20)})
+    assert a.read("t").num_rows == 10
+    assert b.read("t").num_rows == 20
+    assert {"alice::t", "bob::t"} <= set(sess.store.datasets)
+    assert a.used_bytes() != b.used_bytes()
+    front.close()
+
+
+# ---------------------------------------------------------------------------
+# property test: reader / writer / evictor interleavings.  Driven by
+# hypothesis where the dev extra is installed; otherwise the same checker
+# runs over a fixed set of adversarial scripts so the race coverage never
+# silently disappears from an environment.
+# ---------------------------------------------------------------------------
+
+OPS = ("read", "repartition", "spill", "prefetch", "flush")
+
+_FALLBACK_CASES = [
+    ([["read", "read", "read"], ["repartition", "repartition"]], 11),
+    ([["read", "spill", "read"], ["repartition", "prefetch"]], 22),
+    ([["spill", "prefetch", "spill"], ["read", "read", "read"],
+      ["flush", "repartition"]], 33),
+    ([["prefetch", "read"], ["spill", "flush"], ["repartition", "read"]], 44),
+    ([["read"], ["spill"], ["prefetch"]], 55),
+]
+
+
+def _canonical(ds):
+    """Row multiset in a layout-independent total order: rows with equal
+    keys still compare bit-for-bit because (k, v) pairs sort together."""
+    flat = ds.gather()
+    order = np.lexsort((flat["v"], flat["k"]))
+    return {k: np.asarray(v)[order] for k, v in flat.items()}
+
+
+def _check_interleaving(scripts, seed):
+    """Any interleaving of reads, layout swaps, spills, prefetches and
+    flushes over a durable, budget-bound store preserves row multisets
+    bit-for-bit and raises nothing."""
+    rng = np.random.default_rng(seed)
+    data = {"k": rng.integers(0, 1000, 2000),
+            "v": rng.integers(0, 100, 2000).astype(np.float64)}
+    with tempfile.TemporaryDirectory() as root:
+        store = PartitionStore(num_workers=4, root=root,
+                               max_retired_generations=8,
+                               memory_budget_bytes=data["k"].nbytes
+                               + data["v"].nbytes)   # tight: evicts eagerly
+        store.write("d", data)
+        store.flush()
+        wl = Workload("probe")
+        x = wl.scan("d")
+        wl.aggregate(x, key=x["k"], reducer="sum")
+        cand = enumerate_candidates(wl.graph, "d")[0]
+        baseline = _canonical(store.read("d"))
+
+        barrier = threading.Barrier(len(scripts))
+        errors = []
+
+        def run_script(ops):
+            try:
+                barrier.wait(timeout=30)
+                for op in ops:
+                    if op == "read":
+                        got = _canonical(store.read("d"))
+                        for k in baseline:
+                            np.testing.assert_array_equal(got[k],
+                                                          baseline[k])
+                    elif op == "repartition":
+                        store.repartition(store.read("d"), cand, swap=True)
+                    elif op == "spill":
+                        store.spill("d")
+                    elif op == "prefetch":
+                        store.prefetch("d")
+                    elif op == "flush":
+                        store.flush()
+            except BaseException as e:  # noqa: BLE001
+                errors.append((ops, e))
+
+        threads = [threading.Thread(target=run_script, args=(ops,))
+                   for ops in scripts]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, f"interleaving failed: {errors[:2]}"
+        final = _canonical(store.read("d"))
+        for k in baseline:
+            np.testing.assert_array_equal(final[k], baseline[k])
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @given(st.lists(st.lists(st.sampled_from(OPS), min_size=1, max_size=4),
+                    min_size=2, max_size=3),
+           st.integers(0, 2 ** 16))
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_reader_writer_evictor_interleavings(scripts, seed):
+        _check_interleaving(scripts, seed)
+
+except ImportError:                     # dev extra absent: fixed scripts
+    @pytest.mark.parametrize("scripts,seed", _FALLBACK_CASES)
+    def test_reader_writer_evictor_interleavings(scripts, seed):
+        _check_interleaving(scripts, seed)

@@ -1,0 +1,299 @@
+"""Deterministic race regression tests (DESIGN §11).
+
+Each test freezes a racing thread at an exact point inside the store —
+via the injected sync points (``store.set_sync_point``), i.e. real
+``threading.Event`` barriers, not sleeps — and then drives the other
+side of the race through the frozen window.  These are regression tests
+for the specific interleavings the serving tier makes routine:
+
+* a read racing ``_install``'s generation-pointer flip (both sides of
+  the flip instant);
+* a ``gather()`` racing spill's per-column RAM→memmap container swap
+  (the mixed half-spilled state);
+* a read racing prefetch's memmap→RAM page-in promotion;
+* plan/execute racing a swap: the executor's up-front generation check
+  fails *before* any step runs, and ``plan_and_execute`` re-plans.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import Session
+from repro.core.dsl import Workload
+from repro.core.executor import StalePlanError
+from repro.core.partitioner import enumerate_candidates
+from repro.data.partition_store import PartitionStore
+
+
+def _data(n=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.integers(0, 500, n),
+            "v": rng.integers(0, 100, n).astype(np.float64)}
+
+
+def _candidate():
+    wl = Workload("probe")
+    x = wl.scan("d")
+    wl.aggregate(x, key=x["k"], reducer="sum")
+    return enumerate_candidates(wl.graph, "d")[0]
+
+
+def _canonical(ds):
+    flat = ds.gather()
+    order = np.lexsort((flat["v"], flat["k"]))
+    return {k: np.ascontiguousarray(np.asarray(v)[order])
+            for k, v in flat.items()}
+
+
+def _assert_same(got, want):
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+
+
+class _Freeze:
+    """Reusable one-shot barrier: the hooked thread parks at the sync
+    point (signalling ``reached``) until the test calls ``release()``.
+    Subsequent hits pass straight through."""
+
+    def __init__(self):
+        self.reached = threading.Event()
+        self._go = threading.Event()
+        self._armed = True
+
+    def __call__(self):
+        if not self._armed:
+            return
+        self._armed = False
+        self.reached.set()
+        assert self._go.wait(60), "race test deadlocked at sync point"
+
+    def release(self):
+        self._go.set()
+
+
+# ---------------------------------------------------------------------------
+# read vs _install: the generation-pointer flip
+# ---------------------------------------------------------------------------
+
+def test_read_racing_install_pre_flip_sees_old_generation():
+    store = PartitionStore(num_workers=4, backend="host")
+    store.write("d", _data())
+    baseline = _canonical(store.read("d"))
+    freeze = _Freeze()
+    store.set_sync_point("install:pre_flip", freeze)
+    try:
+        t = threading.Thread(
+            target=lambda: store.repartition(store.read("d"), _candidate(),
+                                             swap=True))
+        t.start()
+        assert freeze.reached.wait(60)
+        # the writer is parked one instruction before the pointer flip:
+        # a read right now MUST resolve generation 0 and stay pinned to it
+        reader = store.read("d")
+        assert reader.generation == 0
+        pre_bits = _canonical(reader)
+        freeze.release()
+        t.join(60)
+
+        # flip landed; the held object still reads its own bits
+        assert store.read("d").generation == 1
+        _assert_same(pre_bits, baseline)
+        _assert_same(_canonical(reader), baseline)        # post-flip
+        assert reader.generation == 0                     # immutable pin
+        # the retained generation resolves to the very same object
+        assert store.read("d", generation=0) is reader
+        _assert_same(_canonical(store.read("d")), baseline)
+    finally:
+        store.set_sync_point("install:pre_flip", None)
+
+
+def test_read_racing_install_post_flip_sees_new_generation():
+    store = PartitionStore(num_workers=4, backend="host")
+    store.write("d", _data())
+    baseline = _canonical(store.read("d"))
+    freeze = _Freeze()
+    store.set_sync_point("install:post_flip", freeze)
+    try:
+        t = threading.Thread(
+            target=lambda: store.repartition(store.read("d"), _candidate(),
+                                             swap=True))
+        t.start()
+        assert freeze.reached.wait(60)
+        # the writer is parked one instruction AFTER the flip: the new
+        # generation must already be complete and readable — no torn state
+        reader = store.read("d")
+        assert reader.generation == 1
+        _assert_same(_canonical(reader), baseline)
+        freeze.release()
+        t.join(60)
+    finally:
+        store.set_sync_point("install:post_flip", None)
+
+
+def test_pinned_read_is_atomic_across_flip():
+    """Regression: ``read(name, generation=G)`` must return the object it
+    validated, not re-read the pointer — a flip between the generation
+    check and the return used to hand back the wrong generation."""
+    store = PartitionStore(num_workers=4, backend="host")
+    store.write("d", _data())
+    gen0 = store.read("d", generation=0)
+    store.repartition(store.read("d"), _candidate(), swap=True)
+    assert gen0.generation == 0
+    assert store.read("d", generation=0) is gen0
+    assert store.read("d", generation=1) is not gen0
+
+
+# ---------------------------------------------------------------------------
+# gather vs spill: the per-column RAM -> memmap container swap
+# ---------------------------------------------------------------------------
+
+def test_gather_racing_spill_mid_column_swap(tmp_path):
+    store = PartitionStore(num_workers=4, backend="host",
+                           root=str(tmp_path / "store"))
+    store.write("d", _data())
+    store.flush()
+    baseline = _canonical(store.read("d"))
+
+    hits = []
+
+    class SecondColumnFreeze(_Freeze):
+        # pass through the first column, freeze before the second flips:
+        # exactly one column is a memmap view, the other still RAM
+        def __call__(self):
+            hits.append(1)
+            if len(hits) == 2:
+                super().__call__()
+
+    freeze = SecondColumnFreeze()
+    store.set_sync_point("spill:column", freeze)
+    try:
+        t = threading.Thread(target=lambda: store.spill("d"))
+        t.start()
+        assert freeze.reached.wait(60)
+        ds = store.read("d")
+        kinds = {k: isinstance(v, np.memmap) for k, v in ds.columns.items()}
+        assert sorted(kinds.values()) == [False, True], \
+            f"expected the frozen half-spilled state, got {kinds}"
+        # a reader in the mixed state still gathers bit-identical rows
+        _assert_same(_canonical(ds), baseline)
+        freeze.release()
+        t.join(60)
+        assert store.is_spilled("d")
+        _assert_same(_canonical(store.read("d")), baseline)
+    finally:
+        store.set_sync_point("spill:column", None)
+
+
+def test_gather_racing_prefetch_page_in(tmp_path):
+    store = PartitionStore(num_workers=4, backend="host",
+                           root=str(tmp_path / "store"))
+    store.write("d", _data())
+    store.flush()
+    assert store.spill("d")
+    baseline = _canonical(store.read("d"))
+
+    freeze = _Freeze()
+    store.set_sync_point("prefetch:pre_swap", freeze)
+    try:
+        t = threading.Thread(target=lambda: store.prefetch("d"))
+        t.start()
+        assert freeze.reached.wait(60)
+        # promotion fully staged but not yet swapped in: readers still see
+        # the memmap containers and must gather the identical bits
+        ds = store.read("d")
+        assert ds.spilled
+        _assert_same(_canonical(ds), baseline)
+        freeze.release()
+        t.join(60)
+        assert not store.read("d").spilled
+        _assert_same(_canonical(store.read("d")), baseline)
+    finally:
+        store.set_sync_point("prefetch:pre_swap", None)
+
+
+def test_spill_prefetch_same_name_serialize_without_deadlock(tmp_path):
+    """The per-name lock serializes spill and prefetch on one dataset; a
+    storm of both from many threads must neither deadlock nor corrupt."""
+    store = PartitionStore(num_workers=4, backend="host",
+                           root=str(tmp_path / "store"))
+    store.write("d", _data())
+    store.flush()
+    baseline = _canonical(store.read("d"))
+    errors = []
+
+    def storm(op):
+        try:
+            for _ in range(8):
+                op("d")
+                _assert_same(_canonical(store.read("d")), baseline)
+        except BaseException as e:      # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=storm, args=(op,))
+               for op in (store.spill, store.prefetch) * 3]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads), "spill/prefetch deadlock"
+    assert not errors, f"storm failed: {errors[:2]}"
+    _assert_same(_canonical(store.read("d")), baseline)
+
+
+# ---------------------------------------------------------------------------
+# execute vs swap: the up-front generation check + transparent re-plan
+# ---------------------------------------------------------------------------
+
+def test_stale_plan_fails_before_any_step_then_replans():
+    sess = Session(num_workers=4)
+    sess.write("d", _data())
+    wl = Workload("q")
+    x = wl.scan("d")
+    wl.aggregate(x, key=x["k"], reducer="sum")
+
+    plan, hit = sess.planner.physical(wl, "host")
+    assert not hit
+    # the layout moves after the plan was cached...
+    sess.store.repartition(sess.store.read("d"), _candidate(), swap=True)
+
+    # ...executing the stale plan fails at validation, before any step:
+    # no partial values, no partial writes
+    with pytest.raises(StalePlanError):
+        sess.executor.execute(plan)
+
+    # while the session-level path re-plans transparently
+    res = sess.run(wl)
+    assert res.stats.shuffles_elided >= 1 or res.stats.shuffles_performed >= 0
+    agg_node = max(n for n, nd in wl.graph.nodes.items()
+                   if nd.kind == "aggregate")
+    assert res.values[agg_node] is not None
+
+
+def test_install_blocked_at_flip_does_not_block_other_datasets():
+    """The frozen writer holds only its own name lock — reads AND writes
+    of other datasets proceed while one dataset's flip is parked."""
+    store = PartitionStore(num_workers=4, backend="host")
+    store.write("d", _data(seed=0))
+    store.write("e", _data(seed=1))
+    base_e = _canonical(store.read("e"))
+    freeze = _Freeze()
+    store.set_sync_point("install:pre_flip", freeze)
+    try:
+        t = threading.Thread(
+            target=lambda: store.repartition(store.read("d"), _candidate(),
+                                             swap=True))
+        t.start()
+        assert freeze.reached.wait(60)
+        # "e" is fully usable while "d"'s flip is frozen mid-install
+        _assert_same(_canonical(store.read("e")), base_e)
+        store.set_sync_point("install:pre_flip", None)   # unhook before e
+        store.write("e", _data(seed=2))
+        assert store.read("e").generation == 1
+        freeze.release()
+        t.join(60)
+        assert store.read("d").generation == 1
+    finally:
+        store.set_sync_point("install:pre_flip", None)
