@@ -153,12 +153,58 @@ def bench_device_rebucket():
          f"device/host={t_dev / t_host:.2f}x kernel_exact={ok}")
 
 
+def bench_scatter_skew():
+    """Variable-capacity scatter (DESIGN §12): the same fused scatter plan
+    writing a Zipf-skewed padded layout through a :class:`CapacityMap`
+    (flat slot ranges, power-of-two buckets) vs the uniform ``(m, cap)``
+    layout sized by the hottest partition."""
+    from repro.data.capacity import plan_capacity_map, valid_slot_index
+    from repro.data.device_repartition import (device_partition_ids,
+                                               device_scatter_padded)
+    from repro.data.skew import zipf_keys
+
+    n, m = 500_000, 32
+    rng = np.random.default_rng(5)
+    keys = zipf_keys(n, n, 1.1, rng=rng)
+    cols = {"key": keys, "val": rng.normal(size=n).astype(np.float32)}
+    pids_d, hist = device_partition_ids(keys, m, use_kernel=False)
+    pids = np.asarray(pids_d).astype(np.int64)
+    counts = np.asarray(hist).astype(np.int64)
+    cmap = plan_capacity_map(counts)
+    assert cmap is not None                       # zipf keys must bucket
+
+    def uniform():
+        return device_scatter_padded(cols, pids, counts)
+
+    def bucketed():
+        return device_scatter_padded(cols, pids, counts, capacity_map=cmap)
+
+    uniform(); bucketed()                         # trace outside the timer
+    t_uni, out_u = _time(lambda: uniform()["val"], n=3), uniform()
+    t_cm, out_b = _time(lambda: bucketed()["val"], n=3), bucketed()
+
+    cap = int(counts.max())
+    uni_off = np.arange(m, dtype=np.int64) * cap
+    flat_u = np.asarray(out_u["val"]).reshape(-1)[
+        valid_slot_index(counts, uni_off)]
+    flat_b = np.asarray(out_b["val"])[valid_slot_index(counts, cmap.offsets)]
+    np.testing.assert_array_equal(flat_u, flat_b)  # bit-identical rows
+
+    slots_u, slots_b = m * cap, cmap.total_slots
+    emit("kernel_scatter_skew", t_cm * 1e6,
+         f"uniform={t_uni * 1e6:.0f}us n={n} m={m} zipf(1.1) "
+         f"slots {slots_b} vs {slots_u} ({slots_u / slots_b:.1f}x fewer) "
+         f"buckets={len(cmap.bucket_set())} bucketed/uniform="
+         f"{t_cm / t_uni:.2f}x (one shared trace)")
+
+
 def main():
     bench_flash()
     bench_hash_partition()
     bench_scatter_perm()
     bench_ssd()
     bench_device_rebucket()
+    bench_scatter_skew()
 
 
 if __name__ == "__main__":

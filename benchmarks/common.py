@@ -21,6 +21,8 @@ from repro.api import Session
 from repro.core import HistoryStore, partitioning_creation
 from repro.core.advisor import GreedySelector
 from repro.data.partition_store import PartitionStore
+from repro.data.skew import zipf_keys  # noqa: F401 — canonical skewed-key
+                                       # generator, shared with drivers.py
 
 NET_BW = 1.25e9      # 10 Gbps
 

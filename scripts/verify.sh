@@ -16,6 +16,11 @@
 #             background thread flipping layout generations — every result
 #             must match the serial baseline bit-for-bit, zero failures.
 #
+#   --bench   before the bench run, the skew-adaptive smoke
+#             (scripts/skew_smoke.py) drives the full DESIGN §12 loop:
+#             Zipf tables → Autopilot salt tick and rebucket tick, padding
+#             waste must drop, consumer results must stay bit-identical.
+#
 #   --bench   after the tests, run the benchmark suite in smoke mode
 #             (LACHESIS_BENCH_SMOKE=1: synthetic inputs shrunk to CI size;
 #             the headline device-repartition rows keep their full N so the
@@ -70,6 +75,13 @@ JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python scripts/serving_stress.py 10 8
 
 if [[ "$RUN_BENCH" == 1 ]]; then
+    # skew-adaptive loop smoke (DESIGN §12): salt + rebucket ticks must
+    # shrink padding waste with bit-identical consumer results
+    echo "== skew smoke"
+    JAX_PLATFORMS=cpu LACHESIS_BENCH_SMOKE=1 \
+        PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python scripts/skew_smoke.py
+
     echo "== bench smoke → $BENCH_JSON"
     JAX_PLATFORMS=cpu LACHESIS_BENCH_SMOKE=1 \
         PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

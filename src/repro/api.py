@@ -95,13 +95,18 @@ class Session:
                  plan_cache_capacity: int = 128,
                  store_path: Optional[str] = None,
                  memory_budget_bytes: Optional[int] = None,
-                 autoflush: bool = True):
+                 autoflush: bool = True,
+                 adaptive_capacity: bool = False):
         """``store_path`` (DESIGN §10) backs the session's store with the
         durable tier: an existing store directory is reattached (its
         layouts, partitioner signatures and generation numbers carry over,
         so this session's plans elide the shuffles a previous application's
         layouts paid for), a fresh directory is initialized.  Mutually
-        exclusive with passing a ``store`` object."""
+        exclusive with passing a ``store`` object.
+
+        ``adaptive_capacity`` (DESIGN §12) lets the store plan non-uniform
+        per-partition capacities on skewed writes and arms the Autopilot's
+        skew actions (hot-key salting, capacity rebucketing)."""
         self.registry = registry or REGISTRY
         self._backend: Backend = self.registry.get(backend)
         if store is not None and store_path is not None:
@@ -115,7 +120,8 @@ class Session:
                                    registry=self.registry,
                                    root=store_path,
                                    memory_budget_bytes=memory_budget_bytes,
-                                   autoflush=autoflush)
+                                   autoflush=autoflush,
+                                   adaptive_capacity=adaptive_capacity)
         self.net_bandwidth = net_bandwidth
         self.history = history
         self.run_hooks: List[Callable[[Any, EngineStats], None]] = []

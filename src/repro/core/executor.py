@@ -26,6 +26,7 @@ import numpy as np
 from ..data.device_repartition import device_flat_columns, \
     device_rebucket_full
 from ..data.partition_store import RetiredGenerationError
+from ..data.skew import HeavyHitterSketch
 from .ir import _mix_hash, resolve_fn
 
 Columns = Dict[str, np.ndarray]
@@ -99,6 +100,12 @@ class EngineStats:
     storage_io_bytes: int = 0
     storage_io_s: float = 0.0
     storage_rehydrations: int = 0
+    # padded-layout accounting over the datasets this run scanned (DESIGN
+    # §12): padded = bytes the layouts actually occupy, valid = bytes of
+    # real rows.  The gap is what key skew costs; the Observer feeds it to
+    # the cost model's padding term.
+    padded_bytes: int = 0
+    valid_bytes: int = 0
     # the HistoryStore this run's executor appended its record to (None if
     # unobserved) — lets the Observer hook skip a duplicate append when it
     # shares that exact store
@@ -189,6 +196,8 @@ class Executor:
                 flat = ds.gather()
                 dev = device_flat_columns(ds) if step.device_relay else None
                 stats.input_bytes += ds.nbytes
+                stats.padded_bytes += int(getattr(ds, "padded_bytes", 0))
+                stats.valid_bytes += int(getattr(ds, "valid_bytes", 0))
                 vals[step.nid] = TableVal(flat, ds.counts.copy(),
                                           ds.partitioner, device_columns=dev)
             elif kind == "partition":
@@ -244,6 +253,8 @@ class Executor:
                 latency=stats.wall_s,
                 input_bytes=float(stats.input_bytes),
                 output_bytes=float(stats.output_bytes),
+                padded_bytes=float(stats.padded_bytes),
+                valid_bytes=float(stats.valid_bytes),
                 candidate_stats=stats.candidate_stats or {})
         for hook in hooks:
             hook(workload, stats)
@@ -451,12 +462,17 @@ def _record_candidate_stats(out: Dict[str, Dict[str, float]], sig: str,
     min distinct keys — so per-run stats compose like per-group ones."""
     object_bytes = float(table.nbytes())
     key_bytes = float(key_vals.nbytes)
+    # heavy-hitter sketch over the key column (DESIGN §12): a lower bound
+    # on the hottest key's share, riding the same observation pass — the
+    # Autopilot's salt trigger.  Merge-by-max below is correct for it.
     st = {
         "selectivity": key_bytes / object_bytes if object_bytes else 0.0,
         "distinct_keys": float(np.unique(key_vals).size),
         "num_objects": float(table.num_rows),
         "key_bytes": key_bytes,
         "object_bytes": object_bytes,
+        "max_key_fraction": HeavyHitterSketch(k=8).update(key_vals)
+        .max_fraction(),
     }
     cur = out.get(sig)
     if cur is None:

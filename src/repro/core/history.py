@@ -35,6 +35,10 @@ class ExecutionRecord:
     latency: float = 0.0                               # seconds
     input_bytes: float = 0.0
     output_bytes: float = 0.0
+    # padded-layout accounting over the datasets this run scanned (DESIGN
+    # §12): the padded-vs-valid gap feeds the cost model's padding term
+    padded_bytes: float = 0.0
+    valid_bytes: float = 0.0
     # per-candidate runtime stats observed in this run, keyed by candidate
     # signature: {"selectivity": float, "distinct_keys": float,
     #             "key_bytes": float, "object_bytes": float}
@@ -83,6 +87,7 @@ class HistoryStore:
 
     def log_workload(self, workload, *, timestamp: float, latency: float = 0.0,
                      input_bytes: float = 0.0, output_bytes: float = 0.0,
+                     padded_bytes: float = 0.0, valid_bytes: float = 0.0,
                      candidate_stats: Optional[Dict] = None) -> ExecutionRecord:
         g = workload.graph
         rec = ExecutionRecord(
@@ -92,6 +97,7 @@ class HistoryStore:
             outputs=[g.nodes[o].params["dataset"] for o in g.writes],
             latency=latency, input_bytes=input_bytes,
             output_bytes=output_bytes,
+            padded_bytes=padded_bytes, valid_bytes=valid_bytes,
             candidate_stats=candidate_stats or {})
         self.log(rec, ir=g)
         return rec
@@ -204,6 +210,7 @@ def _copy_record(r: ExecutionRecord) -> ExecutionRecord:
         app_id=r.app_id, timestamp=r.timestamp, ir_signature=r.ir_signature,
         inputs=list(r.inputs), outputs=list(r.outputs), latency=r.latency,
         input_bytes=r.input_bytes, output_bytes=r.output_bytes,
+        padded_bytes=r.padded_bytes, valid_bytes=r.valid_bytes,
         candidate_stats={k: dict(v) for k, v in r.candidate_stats.items()},
         weight=r.weight)
 
@@ -221,6 +228,10 @@ def _merge_record(agg: ExecutionRecord, r: ExecutionRecord) -> None:
                        + r.weight * r.input_bytes) / w
     agg.output_bytes = (agg.weight * agg.output_bytes
                         + r.weight * r.output_bytes) / w
+    agg.padded_bytes = (agg.weight * agg.padded_bytes
+                        + r.weight * r.padded_bytes) / w
+    agg.valid_bytes = (agg.weight * agg.valid_bytes
+                       + r.weight * r.valid_bytes) / w
     agg.timestamp = max(agg.timestamp, r.timestamp)
     for d in r.inputs:
         if d not in agg.inputs:

@@ -94,6 +94,12 @@ class PartitionerCandidate:
     source_dataset: str = ""
     origin: Tuple[int, int] = (-1, -1)  # (root, leaf) ids in the parent IR
 
+    #: True when ``partition_ids`` is exactly hash(key) % m, so the device
+    #: hash kernel may compute pids from the key column alone.  Subclasses
+    #: with custom pid math (e.g. SaltedPartitioner) set this False and the
+    #: store falls back to host pids + device scatter.
+    kernel_dispatchable = True
+
     def __post_init__(self):
         if self.graph is not None and not self.graph.is_two_terminal():
             raise ValueError("partitioner candidate must be two-terminal")
@@ -153,6 +159,43 @@ class PartitionerCandidate:
             rng = rng if rng is not None else jax.random.PRNGKey(0)
             return jax.random.randint(rng, (n,), 0, num_partitions, jnp.int32)
         raise ValueError(f"unknown strategy {self.strategy}")
+
+
+@dataclass
+class SaltedPartitioner(PartitionerCandidate):
+    """Hot-key splitting (DESIGN §12): rows of a *hot* key are sprayed
+    round-robin across ``salt_factor`` consecutive partitions instead of
+    all landing on ``hash(key) % m``, so one heavy hitter stops dictating
+    every partition's capacity.
+
+    Correctness composes automatically: the salt is part of
+    ``signature_set()``, so Alg. 4 never equates a salted layout with a
+    consumer's plain hash partitioner — consumers shuffle (no wrong
+    elision), and the Autopilot only applies salting when the padding
+    savings outweigh the elision it forfeits (priced by the cost model).
+    """
+
+    hot_keys: Tuple = ()
+    salt_factor: int = 4
+
+    kernel_dispatchable = False     # pid math below ≠ plain hash(key) % m
+
+    def signature_set(self) -> Tuple[str, ...]:
+        base = super().signature_set()
+        keys = ",".join(str(k) for k in self.hot_keys)
+        return tuple(f"salt{self.salt_factor}[{keys}]({s})" for s in base)
+
+    def partition_ids(self, data: Any, num_partitions: int,
+                      rng: Optional[jax.Array] = None) -> Any:
+        import numpy as np
+        keys = np.asarray(self.key_fn()(data)).reshape(-1)
+        base = np.asarray(
+            super().partition_ids(data, num_partitions)).astype(np.int64)
+        hot = np.isin(keys, np.asarray(list(self.hot_keys),
+                                       dtype=keys.dtype))
+        salt = np.arange(keys.shape[0], dtype=np.int64) % self.salt_factor
+        return np.where(hot, (base + salt) % num_partitions,
+                        base).astype(np.int32)
 
 
 def keyless_candidates() -> List[PartitionerCandidate]:

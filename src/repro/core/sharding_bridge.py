@@ -73,17 +73,29 @@ def device_put_dataset(mesh: Mesh, ds,
     if ds.num_workers % extent:
         raise ValueError(
             f"m={ds.num_workers} not divisible by mesh data extent {extent}")
+    # A bucketed (CapacityMap) layout has no leading worker axis — its flat
+    # slot axis is not evenly divisible across the mesh — so its columns are
+    # placed on device unsharded (replicated); worker-locality for bucketed
+    # datasets comes back when the slot ranges align with node boundaries
+    # (ROADMAP item 2).
+    bucketed = getattr(ds, "capacity_map", None) is not None
     cols = {}
     for k, v in ds.columns.items():
         # already-device-resident columns (device write / d2d repartition
         # output) are re-placed device-to-device — no host round-trip
         if isinstance(v, jax.Array):
+            if bucketed:
+                cols[k] = jax.device_put(v)
+                continue
             sh = sharding_for(mesh, ds.partitioner, data_axes,
                               extra_dims=v.ndim - 2)
             cols[k] = jax.device_put(v, sh)
             continue
         v_np = np.asarray(v)
         if dtype_roundtrips(v_np.dtype):
+            if bucketed:
+                cols[k] = jax.device_put(v_np)
+                continue
             sh = sharding_for(mesh, ds.partitioner, data_axes,
                               extra_dims=v_np.ndim - 2)
             cols[k] = jax.device_put(v_np, sh)
@@ -92,4 +104,5 @@ def device_put_dataset(mesh: Mesh, ds,
     return StoredDataset(name=ds.name, columns=cols, counts=ds.counts,
                          partitioner=ds.partitioner, num_rows=ds.num_rows,
                          nbytes=ds.nbytes, created_at=ds.created_at,
-                         generation=ds.generation)
+                         generation=ds.generation,
+                         capacity_map=getattr(ds, "capacity_map", None))

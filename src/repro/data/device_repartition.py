@@ -67,6 +67,7 @@ import numpy as np
 
 from ..kernels.hash_partition.ops import (padded_partition_ids,
                                           partition_ids, scatter_permutation)
+from .capacity import CapacityMap, bucket_capacity, valid_slot_index
 
 Columns = Dict[str, Any]
 
@@ -227,15 +228,21 @@ def host_counting_order(pids: np.ndarray) -> np.ndarray:
 
 
 def host_counting_sort_dest(pids: np.ndarray, counts: np.ndarray,
-                            cap: int) -> np.ndarray:
-    """Flat destination slot (pid * cap + stable rank-within-pid) of every
-    row — one vectorized counting-sort placement shared by all columns."""
+                            cap: int,
+                            dest_offsets: Optional[np.ndarray] = None
+                            ) -> np.ndarray:
+    """Flat destination slot (partition base + stable rank-within-pid) of
+    every row — one vectorized counting-sort placement shared by all
+    columns.  The uniform layout's base is ``pid * cap``; a bucketed layout
+    passes its own per-partition ``dest_offsets``."""
     n = pids.shape[0]
     offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
     order = host_counting_order(pids)
     rank = np.empty(n, np.int64)
     rank[order] = np.arange(n, dtype=np.int64) - offsets[pids[order]]
-    return pids * cap + rank
+    if dest_offsets is None:
+        return pids * cap + rank
+    return np.asarray(dest_offsets, dtype=np.int64)[pids] + rank
 
 
 # ---------------------------------------------------------------------------
@@ -453,16 +460,18 @@ def _hostperm_rebucket_plan(m: int, B: int, spec: Tuple) -> ShufflePlan:
 
 def _fused_scatter_plan(m: int, B: int, R: int, spec: Tuple,
                         interpret: bool, use_kernel: bool) -> ShufflePlan:
-    """pids + counts + dynamic (n, cap) + packs → flat (R, C) layout packs.
+    """pids + counts + dynamic (n, slot offsets) + packs → flat (R, C) packs.
 
-    ``cap`` rides along as a traced scalar and the output rows are bucketed
-    to ``R ≥ m * cap`` (+1 trash slot), so same-shape writes with different
-    key skew — different ``counts.max()`` — reuse one trace; the caller
-    slices ``[:m * cap]`` eagerly outside the jit."""
+    The per-partition destination base offsets ride along as a traced
+    ``(m,)`` array and the output rows are bucketed to ``R ≥ total slots``
+    (+1 trash slot), so same-shape writes with different key skew — and
+    uniform vs bucketed :class:`CapacityMap` layouts alike — reuse one
+    trace; the caller slices ``[:total]`` eagerly outside the jit.  The
+    uniform layout simply passes ``offsets = arange(m) * cap``."""
     key = ("scatter", m, B, R, spec, interpret, use_kernel, "fused")
 
     def build(plan: ShufflePlan):
-        def fn(pids, counts, n, cap, packs):
+        def fn(pids, counts, n, slot_offs, packs):
             plan.traces += 1
             counts_full = jnp.concatenate(
                 [counts.astype(jnp.int32),
@@ -472,8 +481,10 @@ def _fused_scatter_plan(m: int, B: int, R: int, spec: Tuple,
                                        use_kernel=use_kernel)
             offs = jnp.cumsum(counts_full) - counts_full
             rank = dest - offs[pids]
-            # real rows → (pid, rank) slot; padding rows → the trash slot R
-            flat_dest = jnp.where(pids < m, pids * cap + rank, R)
+            # real rows → partition base + rank; padding rows (pid == m) →
+            # the trash slot R (the clamped take is discarded by the where)
+            base = jnp.take(slot_offs, jnp.minimum(pids, m - 1))
+            flat_dest = jnp.where(pids < m, base + rank, R)
             outs = tuple(
                 jnp.zeros((R + 1, p.shape[1]), p.dtype)
                 .at[flat_dest].set(p)[:R]
@@ -606,23 +617,48 @@ def device_rebucket(columns: Columns, key_vals, num_partitions: int, *,
 # Padded scatter (store write path)
 # ---------------------------------------------------------------------------
 
+def _check_overflow(counts_np: np.ndarray, capacities: np.ndarray) -> None:
+    """Raise a diagnosable error when any partition outgrows its capacity
+    (the scatter would silently clamp/drop the overflowing rows)."""
+    over = np.flatnonzero(counts_np > capacities)
+    if over.size:
+        pid = int(over[int(np.argmax((counts_np - capacities)[over]))])
+        need = int(counts_np[pid])
+        have = int(capacities[pid])
+        raise ValueError(
+            f"partition {pid} has {need} rows but capacity {have}: the "
+            f"scatter would silently drop/clamp overflowing rows "
+            f"(suggest overflow bucket capacity {bucket_capacity(need)} "
+            f"for partition {pid}, e.g. via CapacityMap.from_counts)")
+
+
 def device_scatter_padded(flat_columns: Columns, pids, counts, *,
                           capacity: Optional[int] = None,
+                          capacity_map: Optional[CapacityMap] = None,
                           interpret: Optional[bool] = None,
                           use_kernel: Optional[bool] = None,
                           mode: Optional[str] = None,
                           device_columns: Optional[Columns] = None
                           ) -> Columns:
-    """Scatter flat rows into the persistent ``(m, capacity, ...)`` layout.
+    """Scatter flat rows into the persistent padded layout.
 
-    One cached counting-sort plan per (bucket, dtype-set, m, capacity):
-    destination slot of row i is ``(pids[i], rank-of-i-within-its-
-    partition)``, materialized per dtype *pack* — K same-dtype columns cost
+    Uniform layout (default): ``(m, capacity, ...)`` columns.  With a
+    ``capacity_map``, each partition gets its own slot range and columns
+    come back *flat* as ``(total_slots, ...)`` — partition ``i`` occupies
+    ``[offsets[i], offsets[i] + capacities[i])``.  Both shapes ride the
+    same cached plan: the per-partition base offsets are a traced array, so
+    switching skew levels (or uniform ↔ bucketed within one output-row
+    bucket) never retraces.
+
+    One cached counting-sort plan per (bucket, dtype-set, m, row-bucket):
+    destination slot of row i is ``base[pids[i]] + rank-of-i-within-its-
+    partition``, materialized per dtype *pack* — K same-dtype columns cost
     one scatter.  Round-trippable columns come back device-resident (jax
     arrays); 64-bit columns are scattered host-side (hybrid).
 
-    An explicit ``capacity`` smaller than the fullest partition would
-    silently clamp/drop rows inside the scatter, so it raises instead.
+    A ``capacity`` (or capacity-map bucket) smaller than its partition's
+    row count would silently clamp/drop rows inside the scatter, so it
+    raises instead, naming the offending partition.
     """
     interpret = _resolve_interpret(interpret)
     use_kernel = _resolve_use_kernel(use_kernel)
@@ -631,25 +667,45 @@ def device_scatter_padded(flat_columns: Columns, pids, counts, *,
     m = int(counts_np.shape[0])
     n = int(counts_np.sum())
     max_count = int(counts_np.max()) if n else 0
-    if capacity is not None and int(capacity) < max_count:
-        raise ValueError(
-            f"capacity={int(capacity)} < fullest partition ({max_count} "
-            f"rows): the scatter would silently drop/clamp overflowing rows")
-    cap = int(capacity) if capacity is not None else max_count
+    if capacity_map is not None:
+        if capacity is not None:
+            raise ValueError("pass capacity or capacity_map, not both")
+        if capacity_map.num_partitions != m:
+            raise ValueError(
+                f"capacity_map covers {capacity_map.num_partitions} "
+                f"partitions, counts cover {m}")
+        _check_overflow(counts_np, capacity_map.capacities)
+        offsets_np = capacity_map.offsets.astype(np.int64)
+        total = capacity_map.total_slots
+        cap = 0
+    else:
+        if capacity is not None and int(capacity) < max_count:
+            _check_overflow(counts_np,
+                            np.full(m, int(capacity), dtype=np.int64))
+        cap = int(capacity) if capacity is not None else max_count
+        offsets_np = np.arange(m, dtype=np.int64) * cap
+        total = m * cap
+
+    def _shape(trail: Tuple[int, ...]) -> Tuple[int, ...]:
+        if capacity_map is not None:
+            return (total,) + trail
+        return (m, cap) + trail
+
     if n == 0:
-        cap = cap or 1
+        if capacity_map is None:
+            cap = cap or 1
         out: Columns = {}
         for k, v in flat_columns.items():
             v = np.asarray(v)
             if dtype_roundtrips(v.dtype):      # stay device-backed
-                out[k] = jnp.zeros((m, cap) + v.shape[1:], v.dtype)
+                out[k] = jnp.zeros(_shape(v.shape[1:]), v.dtype)
             else:
-                out[k] = np.zeros((m, cap) + v.shape[1:], v.dtype)
+                out[k] = np.zeros(_shape(v.shape[1:]), v.dtype)
         return out
 
     dev_cols, host_cols = _split_columns(flat_columns, device_columns)
     B = shape_bucket(n)
-    R = shape_bucket(m * cap)     # output-row bucket: cap is traced, not keyed
+    R = shape_bucket(total)  # output-row bucket: offsets traced, not keyed
 
     if mode == "fused":
         packs = _build_packs(dev_cols, n, B)
@@ -665,7 +721,8 @@ def device_scatter_padded(flat_columns: Columns, pids, counts, *,
         plan.calls += 1
         flat_dest_d, outs = plan.fn(
             pids_p, jnp.asarray(counts_np.astype(np.int32)), jnp.int32(n),
-            jnp.int32(cap), tuple(jnp.asarray(p.data) for p in packs))
+            jnp.asarray(offsets_np.astype(np.int32)),
+            tuple(jnp.asarray(p.data) for p in packs))
         flat_dest_np = None
         if host_cols:
             flat_dest_np = np.asarray(flat_dest_d)[:n]
@@ -674,7 +731,8 @@ def device_scatter_padded(flat_columns: Columns, pids, counts, *,
         # source every empty (worker, slot) cell gathers from
         packs = _build_packs(dev_cols, n, B + 1)
         pids_np = np.asarray(pids).astype(np.int64)
-        flat_dest_np = host_counting_sort_dest(pids_np, counts_np, cap)
+        flat_dest_np = host_counting_sort_dest(pids_np, counts_np, cap,
+                                               dest_offsets=offsets_np)
         inv = np.full(R, B, np.int32)
         inv[flat_dest_np] = np.arange(n, dtype=np.int32)
         plan = _hostperm_scatter_plan(m, B, R, _pack_spec(packs))
@@ -684,14 +742,19 @@ def device_scatter_padded(flat_columns: Columns, pids, counts, *,
 
     columns: Columns = {}
     for p, mat in zip(packs, outs):
-        # eager slice from the row bucket down to the real (m, cap) layout
-        grid = mat[:m * cap].reshape(m, cap, p.width)
-        for name, trail, c0, c1 in p.members:
-            columns[name] = grid[:, :, c0:c1].reshape((m, cap) + trail)
+        # eager slice from the row bucket down to the real layout
+        if capacity_map is not None:
+            flat = mat[:total]
+            for name, trail, c0, c1 in p.members:
+                columns[name] = flat[:, c0:c1].reshape((total,) + trail)
+        else:
+            grid = mat[:total].reshape(m, cap, p.width)
+            for name, trail, c0, c1 in p.members:
+                columns[name] = grid[:, :, c0:c1].reshape((m, cap) + trail)
     for name, v in host_cols:
-        buf = np.zeros((m * cap + 1,) + v.shape[1:], v.dtype)
+        buf = np.zeros((total + 1,) + v.shape[1:], v.dtype)
         buf[flat_dest_np] = v
-        columns[name] = buf[:m * cap].reshape((m, cap) + v.shape[1:])
+        columns[name] = buf[:total].reshape(_shape(v.shape[1:]))
     return columns
 
 
@@ -700,25 +763,37 @@ def device_scatter_padded(flat_columns: Columns, pids, counts, *,
 # ---------------------------------------------------------------------------
 
 def _valid_slot_index(ds) -> np.ndarray:
-    """Flat indices of the valid slots of a ``(m, capacity, ...)`` layout in
-    worker-major order — the exact row order ``StoredDataset.gather()``
-    produces.  Single source of truth for every flatten below (the
-    bit-identical guarantee hangs on this ordering)."""
-    cap = ds.capacity
+    """Flat indices of the valid slots of a padded layout in worker-major
+    order — the exact row order ``StoredDataset.gather()`` produces.
+    Single source of truth for every flatten below (the bit-identical
+    guarantee hangs on this ordering).  Uniform layouts use base offsets
+    ``w * capacity``; bucketed layouts use their :class:`CapacityMap`
+    offsets — the enumerated row order is identical either way.
+    """
     counts = np.asarray(ds.counts)
-    if not counts.sum():
-        return np.zeros(0, np.int64)
-    return np.concatenate(
-        [w * cap + np.arange(counts[w]) for w in range(ds.num_workers)])
+    cm = getattr(ds, "capacity_map", None)
+    if cm is not None:
+        offs = cm.offsets
+    else:
+        offs = np.arange(ds.num_workers, dtype=np.int64) * ds.capacity
+    return valid_slot_index(counts, offs)
+
+
+def _flat_slots(ds, v):
+    """A column viewed as flat slots: bucketed columns already are
+    ``(total_slots, ...)``; uniform ``(m, capacity, ...)`` columns
+    reshape."""
+    if getattr(ds, "capacity_map", None) is not None:
+        return v
+    return v.reshape((ds.num_workers * ds.capacity,) + v.shape[2:])
 
 
 def flatten_dataset(ds, device_only: bool = False) -> Columns:
-    """Flatten a StoredDataset's ``(m, capacity, ...)`` columns back to flat
-    rows *without* a host round-trip: device-resident columns are gathered
-    with a device permutation over :func:`_valid_slot_index`; host columns
-    take the numpy path (skipped entirely under ``device_only``).
+    """Flatten a StoredDataset's padded columns back to flat rows *without*
+    a host round-trip: device-resident columns are gathered with a device
+    permutation over :func:`_valid_slot_index`; host columns take the numpy
+    path (skipped entirely under ``device_only``).
     """
-    mw, cap = ds.num_workers, ds.capacity
     idx = _valid_slot_index(ds)
     idx_dev = None
     out: Columns = {}
@@ -726,11 +801,9 @@ def flatten_dataset(ds, device_only: bool = False) -> Columns:
         if isinstance(v, jax.Array):
             if idx_dev is None:
                 idx_dev = jnp.asarray(idx.astype(np.int32))
-            out[k] = jnp.take(v.reshape((mw * cap,) + v.shape[2:]),
-                              idx_dev, axis=0)
+            out[k] = jnp.take(_flat_slots(ds, v), idx_dev, axis=0)
         elif not device_only:
-            v = np.asarray(v)
-            out[k] = v.reshape((mw * cap,) + v.shape[2:])[idx]
+            out[k] = _flat_slots(ds, np.asarray(v))[idx]
     return out
 
 
@@ -743,21 +816,29 @@ def device_flat_columns(ds) -> Optional[Columns]:
 def device_repartition_dataset(ds, partitioner, num_partitions: int, *,
                                interpret: Optional[bool] = None,
                                use_kernel: Optional[bool] = None,
-                               mode: Optional[str] = None
-                               ) -> Tuple[Columns, np.ndarray]:
+                               mode: Optional[str] = None,
+                               plan_capacity: Optional[Callable] = None
+                               ) -> Tuple[Columns, np.ndarray,
+                                          Optional[CapacityMap]]:
     """Device-to-device repartition: device-resident StoredDataset → new
-    ``(m, capacity, ...)`` device layout, no host gather/concatenate.
+    padded device layout, no host gather/concatenate.
 
     Valid rows are gathered on device, the partition key is evaluated with
     the candidate's compiled key projection (jnp — stays on device), and the
     cached plan scatters straight into the new padded layout.  Only the
     pids/histogram cross to the host (the histogram sizes the capacity).
     64-bit columns ride the hybrid path as usual.
+
+    ``plan_capacity`` (counts → Optional[CapacityMap]) lets the store
+    choose a bucketed layout from the fresh histogram; returns the map it
+    used (None ⇒ uniform ``(m, capacity, ...)``).
     """
     flat = flatten_dataset(ds)
     keys = partitioner.key_fn()(flat)
     pids, counts = shuffle_pids(keys, num_partitions, interpret=interpret,
                                 use_kernel=use_kernel, mode=mode)
-    columns = device_scatter_padded(flat, pids, counts, interpret=interpret,
+    cmap = plan_capacity(counts) if plan_capacity is not None else None
+    columns = device_scatter_padded(flat, pids, counts, capacity_map=cmap,
+                                    interpret=interpret,
                                     use_kernel=use_kernel, mode=mode)
-    return columns, counts
+    return columns, counts, cmap

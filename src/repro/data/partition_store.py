@@ -41,9 +41,11 @@ import numpy as np
 
 from ..core.partitioner import (HASH, PartitionerCandidate, RANDOM,
                                 ROUND_ROBIN)
+from .capacity import CapacityMap, plan_capacity_map, valid_slot_index
 from .device_repartition import (device_repartition_dataset,
                                  device_scatter_padded, dtype_roundtrips,
-                                 host_counting_sort_dest, shuffle_pids)
+                                 flatten_dataset, host_counting_sort_dest,
+                                 shuffle_pids)
 
 
 Columns = Dict[str, np.ndarray]
@@ -69,14 +71,18 @@ class RetiredGenerationError(KeyError):
 _counting_sort_dest = host_counting_sort_dest
 
 
-def _presorted_dest(counts: np.ndarray, cap: int) -> np.ndarray:
+def _presorted_dest(counts: np.ndarray, cap: int,
+                    dest_offsets: Optional[np.ndarray] = None) -> np.ndarray:
     """Same placement for rows already segmented per worker (write_layout):
-    no sort needed, the worker id is implied by the segmentation."""
+    no sort needed, the worker id is implied by the segmentation.  A
+    bucketed layout passes its per-partition ``dest_offsets``."""
     m = counts.shape[0]
     pids = np.repeat(np.arange(m, dtype=np.int64), counts)
     offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
     rank = np.arange(pids.shape[0], dtype=np.int64) - offsets[pids]
-    return pids * cap + rank
+    if dest_offsets is None:
+        return pids * cap + rank
+    return np.asarray(dest_offsets, dtype=np.int64)[pids] + rank
 
 
 @dataclass
@@ -91,15 +97,24 @@ class StoredDataset:
 
     (The eviction loop may swap a column's *container* — in-RAM ndarray ⇄
     read-only memmap of its persisted segment — which is bit-identical by
-    construction, so the immutable-values contract holds for readers.)"""
+    construction, so the immutable-values contract holds for readers.)
+
+    Layouts: with ``capacity_map=None`` (the default), columns are the
+    uniform padded ``(m, capacity, ...)`` grid.  With a
+    :class:`~repro.data.capacity.CapacityMap`, columns are *flat*
+    ``(total_slots, ...)`` and partition ``i`` occupies the slot range
+    ``[offsets[i], offsets[i] + capacities[i])`` — the skew-adaptive
+    layout (DESIGN §12).  ``gather()`` produces the identical row order
+    for both."""
     name: str
-    columns: Columns                   # each (m, capacity, ...)
+    columns: Columns                   # (m, capacity, ...) or (slots, ...)
     counts: np.ndarray                 # (m,) valid rows per worker
     partitioner: Optional[PartitionerCandidate]
     num_rows: int
     nbytes: int
     created_at: float = field(default_factory=time.time)
     generation: int = 0
+    capacity_map: Optional[CapacityMap] = None
 
     @property
     def num_workers(self) -> int:
@@ -107,7 +122,45 @@ class StoredDataset:
 
     @property
     def capacity(self) -> int:
+        if self.capacity_map is not None:
+            caps = self.capacity_map.capacities
+            return int(caps.max()) if caps.size else 0
         return int(next(iter(self.columns.values())).shape[1])
+
+    def slot_capacities(self) -> np.ndarray:
+        """(m,) per-partition slot capacities (uniform ⇒ all equal)."""
+        if self.capacity_map is not None:
+            return self.capacity_map.capacities
+        return np.full(self.num_workers, self.capacity, dtype=np.int64)
+
+    def slot_offsets(self) -> np.ndarray:
+        """(m,) flat-slot base offset of each partition."""
+        if self.capacity_map is not None:
+            return self.capacity_map.offsets
+        return np.arange(self.num_workers, dtype=np.int64) * self.capacity
+
+    @property
+    def total_slots(self) -> int:
+        if self.capacity_map is not None:
+            return self.capacity_map.total_slots
+        return self.num_workers * self.capacity
+
+    @property
+    def padded_bytes(self) -> int:
+        """Bytes actually occupied by the padded layout (incl. padding)."""
+        return int(sum(int(v.nbytes) for v in self.columns.values()))
+
+    @property
+    def valid_bytes(self) -> int:
+        """Bytes of real rows inside the padded layout."""
+        slots = self.total_slots
+        if slots <= 0:
+            return 0
+        return int(self.padded_bytes * (self.num_rows / slots))
+
+    def padding_waste(self) -> int:
+        """Bytes spent on padding alone — what skew costs this layout."""
+        return max(self.padded_bytes - self.valid_bytes, 0)
 
     def skew(self) -> float:
         """max/mean partition fill — load-balance diagnostic."""
@@ -134,8 +187,13 @@ class StoredDataset:
         """Materialize back to flat rows (host-side, used by shuffles):
         one boolean-mask take over the padded layout per column — the
         row-major (worker-major) mask reproduces the per-worker
-        concatenation order exactly."""
+        concatenation order exactly.  A bucketed layout takes the same
+        worker-major rows through its slot-offset index, so the output is
+        bit-identical across layouts."""
         counts = np.asarray(self.counts)
+        if self.capacity_map is not None:
+            idx = valid_slot_index(counts, self.capacity_map.offsets)
+            return {k: np.asarray(v)[idx] for k, v in self.columns.items()}
         m, cap = self.num_workers, self.capacity
         mask = (np.arange(cap) < counts[:, None]).reshape(-1)
         out: Columns = {}
@@ -151,7 +209,8 @@ class StoredDataset:
                              counts=self.counts, partitioner=self.partitioner,
                              num_rows=self.num_rows, nbytes=self.nbytes,
                              created_at=self.created_at,
-                             generation=self.generation)
+                             generation=self.generation,
+                             capacity_map=self.capacity_map)
 
 
 class PartitionStore:
@@ -162,7 +221,9 @@ class PartitionStore:
                  root: Optional[str] = None,
                  memory_budget_bytes: Optional[int] = None,
                  autoflush: bool = True,
-                 write_log_cap: int = DEFAULT_WRITE_LOG_CAP):
+                 write_log_cap: int = DEFAULT_WRITE_LOG_CAP,
+                 adaptive_capacity: bool = False,
+                 capacity_threshold: float = 0.75):
         from ..core.backends import resolve_backend
         # UnknownBackendError on typos; `registry` (default: the global
         # one) lets a Session thread its own registry through, so custom
@@ -174,6 +235,11 @@ class PartitionStore:
         self._device_resident = b.device_resident
         self._storage_prefetch = b.storage_prefetch
         self.interpret = interpret      # None → auto (interpret off-TPU)
+        # skew-adaptive layout (DESIGN §12): opt-in — when on, writes whose
+        # histogram is skewed enough get a bucketed CapacityMap layout
+        # instead of the uniform worst-case capacity
+        self.adaptive_capacity = bool(adaptive_capacity)
+        self.capacity_threshold = float(capacity_threshold)
         self.datasets: Dict[str, StoredDataset] = {}
         self.write_log: List[Dict[str, Any]] = []
         self.write_log_cap = int(write_log_cap)
@@ -181,7 +247,8 @@ class PartitionStore:
         #: from the bounded write_log) — benchmarks read these
         self.write_totals: Dict[str, float] = {
             "entries": 0, "rows": 0, "bytes": 0, "latency_s": 0.0,
-            "evicted": 0}
+            "evicted": 0, "padded_bytes": 0, "valid_bytes": 0,
+            "max_skew": 0.0}
         # generation machinery (DESIGN §8): `datasets` maps each name to its
         # CURRENT generation; superseded generations are retained (bounded)
         # so in-flight readers and audits can still resolve them by number.
@@ -256,6 +323,10 @@ class PartitionStore:
             t["rows"] += int(entry.get("rows", 0))
             t["bytes"] += int(entry.get("bytes", 0))
             t["latency_s"] += float(entry.get("latency", 0.0))
+            t["padded_bytes"] += int(entry.get("padded_bytes", 0))
+            t["valid_bytes"] += int(entry.get("valid_bytes", 0))
+            t["max_skew"] = max(t["max_skew"],
+                                float(entry.get("skew", 0.0)))
             while len(self.write_log) > self.write_log_cap:
                 self.write_log.pop(0)
                 t["evicted"] += 1
@@ -523,23 +594,36 @@ class PartitionStore:
             partitioner = PartitionerCandidate(graph=None, strategy=ROUND_ROBIN)
 
         if self._device_resident:
-            columns, counts = self._dispatch_device(data, partitioner, n, seed)
+            columns, counts, cmap = self._dispatch_device(
+                data, partitioner, n, seed)
         else:
-            columns, counts = self._dispatch_host(data, partitioner, n, seed)
+            columns, counts, cmap = self._dispatch_host(
+                data, partitioner, n, seed)
 
         nbytes = int(sum(np.asarray(v).nbytes for v in data.values()))
         ds = StoredDataset(name=name, columns=columns,
                            counts=counts.astype(np.int64),
-                           partitioner=partitioner, num_rows=n, nbytes=nbytes)
+                           partitioner=partitioner, num_rows=n, nbytes=nbytes,
+                           capacity_map=cmap)
         self._install(name, ds)
         self._log_write({
             "name": name, "rows": n, "bytes": nbytes,
             "strategy": partitioner.strategy,
             "latency": time.perf_counter() - t0,
             "skew": ds.skew(),
+            "padded_bytes": ds.padded_bytes,
+            "valid_bytes": ds.valid_bytes,
+            "bucketed": cmap is not None,
             "generation": ds.generation,
         })
         return ds
+
+    def _plan_cmap(self, counts) -> Optional[CapacityMap]:
+        """Counts → bucketed CapacityMap when adaptive capacity is on and
+        the re-layout saves enough padding; None ⇒ stay uniform."""
+        if not self.adaptive_capacity:
+            return None
+        return plan_capacity_map(counts, threshold=self.capacity_threshold)
 
     # -- dispatch backends ---------------------------------------------------
     def _host_pids(self, data: Columns, partitioner: PartitionerCandidate,
@@ -554,31 +638,48 @@ class PartitionStore:
         single vectorized scatter per column (no per-worker Python loop)."""
         pids = self._host_pids(data, partitioner, n, seed)
         counts = np.bincount(pids, minlength=self.m)
+        cmap = self._plan_cmap(counts)
+        if cmap is not None:
+            dest = _counting_sort_dest(pids, counts, 0,
+                                       dest_offsets=cmap.offsets)
+            total = cmap.total_slots
+            columns: Columns = {}
+            for k, v in data.items():
+                v = np.asarray(v)
+                buf = np.zeros((total,) + v.shape[1:], v.dtype)
+                buf[dest] = v
+                columns[k] = buf
+            return columns, counts, cmap
         cap = int(counts.max()) if n else 1
         dest = _counting_sort_dest(pids, counts, cap)
-        columns: Columns = {}
+        columns = {}
         for k, v in data.items():
             v = np.asarray(v)
             buf = np.zeros((self.m * cap,) + v.shape[1:], v.dtype)
             buf[dest] = v
             columns[k] = buf.reshape((self.m, cap) + v.shape[1:])
-        return columns, counts
+        return columns, counts, None
 
     def _dispatch_device(self, data, partitioner, n, seed):
         """Device dispatch (DESIGN §5): hash keys through the Pallas kernel,
         re-bucket with a jax scatter consuming its (pids, histogram) output.
-        Keyless/range strategies keep their host pid computation but still
-        scatter on device, so the stored columns are device-resident."""
-        if partitioner.strategy == HASH and partitioner.graph is not None:
+        Keyless/range strategies — and partitioners that opt out of kernel
+        dispatch (SaltedPartitioner's pid math is not the plain key hash) —
+        keep their host pid computation but still scatter on device, so the
+        stored columns are device-resident."""
+        if (partitioner.strategy == HASH and partitioner.graph is not None
+                and getattr(partitioner, "kernel_dispatchable", True)):
             keys = partitioner.key_fn()(data)
             pids, counts = shuffle_pids(keys, self.m,
                                         interpret=self.interpret)
         else:
             pids = self._host_pids(data, partitioner, n, seed)
             counts = np.bincount(pids, minlength=self.m).astype(np.int64)
+        cmap = self._plan_cmap(counts)
         columns = device_scatter_padded(data, pids, counts,
+                                        capacity_map=cmap,
                                         interpret=self.interpret)
-        return columns, counts
+        return columns, counts, cmap
 
     def write_layout(self, name: str, flat_columns: Columns,
                      counts: np.ndarray,
@@ -595,26 +696,85 @@ class PartitionStore:
         place of re-uploading the matching host columns."""
         counts = np.asarray(counts, np.int64)
         n = int(counts.sum())
-        cap = int(counts.max()) if n else 1
-        if self._device_resident:
-            # rows are already segmented per worker ⇒ pids are implied
-            pids = np.repeat(np.arange(self.m, dtype=np.int32), counts)
-            columns = device_scatter_padded(flat_columns, pids, counts,
-                                            capacity=cap,
-                                            interpret=self.interpret,
-                                            device_columns=device_columns)
-        else:
-            dest = _presorted_dest(counts, cap)
-            columns = {}
-            for k, v in flat_columns.items():
-                v = np.asarray(v)
-                buf = np.zeros((self.m * cap,) + v.shape[1:], v.dtype)
-                buf[dest] = v
-                columns[k] = buf.reshape((self.m, cap) + v.shape[1:])
+        cmap = self._plan_cmap(counts)
+        columns = self._materialize_layout(flat_columns, counts, cmap,
+                                           device_columns=device_columns)
         nbytes = int(sum(np.asarray(v).nbytes for v in flat_columns.values()))
         ds = StoredDataset(name=name, columns=columns, counts=counts,
-                           partitioner=partitioner, num_rows=n, nbytes=nbytes)
+                           partitioner=partitioner, num_rows=n, nbytes=nbytes,
+                           capacity_map=cmap)
         return self._install(name, ds)
+
+    def _materialize_layout(self, flat_columns: Columns, counts: np.ndarray,
+                            cmap: Optional[CapacityMap],
+                            device_columns: Optional[Columns] = None
+                            ) -> Columns:
+        """Rows already segmented per worker (pids implied by ``counts``) →
+        padded columns: uniform ``(m, cap, ...)`` when ``cmap`` is None,
+        flat bucketed ``(total_slots, ...)`` otherwise.  Shared by
+        write_layout and rebucket."""
+        n = int(counts.sum())
+        cap = int(counts.max()) if n else 1
+        if self._device_resident:
+            pids = np.repeat(np.arange(self.m, dtype=np.int32), counts)
+            return device_scatter_padded(
+                flat_columns, pids, counts,
+                capacity=None if cmap is not None else cap,
+                capacity_map=cmap, interpret=self.interpret,
+                device_columns=device_columns)
+        if cmap is not None:
+            dest = _presorted_dest(counts, 0, dest_offsets=cmap.offsets)
+            total = cmap.total_slots
+            columns: Columns = {}
+            for k, v in flat_columns.items():
+                v = np.asarray(v)
+                buf = np.zeros((total,) + v.shape[1:], v.dtype)
+                buf[dest] = v
+                columns[k] = buf
+            return columns
+        dest = _presorted_dest(counts, cap)
+        columns = {}
+        for k, v in flat_columns.items():
+            v = np.asarray(v)
+            buf = np.zeros((self.m * cap,) + v.shape[1:], v.dtype)
+            buf[dest] = v
+            columns[k] = buf.reshape((self.m, cap) + v.shape[1:])
+        return columns
+
+    def rebucket(self, name: str) -> Tuple[StoredDataset, int]:
+        """Re-layout ``name``'s current generation under a fresh
+        :class:`CapacityMap` planned from its live histogram — SAME
+        partitioner, so consumer elisions survive and no rows cross the
+        network (a local rewrite, not a shuffle).  Publishes the result as
+        a new generation via the usual atomic flip; returns
+        ``(new ds, 0 bytes moved)``.  A no-op (current ds, 0) when the
+        planned layout equals the current one."""
+        t0 = time.perf_counter()
+        ds = self.read(name)
+        counts = np.asarray(ds.counts, np.int64)
+        cmap = plan_capacity_map(counts, threshold=self.capacity_threshold)
+        if cmap == ds.capacity_map:
+            return ds, 0
+        flat = flatten_dataset(ds)
+        new = StoredDataset(name=name,
+                            columns=self._materialize_layout(
+                                flat, counts, cmap),
+                            counts=counts, partitioner=ds.partitioner,
+                            num_rows=ds.num_rows, nbytes=ds.nbytes,
+                            capacity_map=cmap)
+        self._install(name, new)
+        self._log_write({
+            "name": name, "rows": new.num_rows, "bytes": new.nbytes,
+            "strategy": ds.partitioner.strategy if ds.partitioner else None,
+            "latency": time.perf_counter() - t0,
+            "skew": new.skew(),
+            "padded_bytes": new.padded_bytes,
+            "valid_bytes": new.valid_bytes,
+            "bucketed": cmap is not None,
+            "path": "rebucket",
+            "generation": new.generation,
+        })
+        return new, 0
 
     # -- read path -------------------------------------------------------------
     def read(self, name: str,
@@ -689,13 +849,15 @@ class PartitionStore:
             from ..core.sharding_bridge import device_put_dataset
         if (self._device_resident and ds.backend == "device"
                 and partitioner.strategy == HASH
-                and partitioner.graph is not None):
-            columns, counts = device_repartition_dataset(
-                ds, partitioner, self.m, interpret=self.interpret)
+                and partitioner.graph is not None
+                and getattr(partitioner, "kernel_dispatchable", True)):
+            columns, counts, cmap = device_repartition_dataset(
+                ds, partitioner, self.m, interpret=self.interpret,
+                plan_capacity=self._plan_cmap)
             new = StoredDataset(name=name, columns=columns, counts=counts,
                                 partitioner=partitioner,
                                 num_rows=int(counts.sum()),
-                                nbytes=ds.nbytes)
+                                nbytes=ds.nbytes, capacity_map=cmap)
             if mesh is not None:
                 new = device_put_dataset(mesh, new)
             self._install(name, new)
@@ -704,6 +866,9 @@ class PartitionStore:
                 "strategy": partitioner.strategy,
                 "latency": time.perf_counter() - t0,
                 "skew": new.skew(), "path": "d2d",
+                "padded_bytes": new.padded_bytes,
+                "valid_bytes": new.valid_bytes,
+                "bucketed": cmap is not None,
                 "generation": new.generation,
             })
         else:

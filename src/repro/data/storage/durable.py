@@ -200,6 +200,7 @@ class DurableStore:
         """Reopen ``name`` as a memmap-backed StoredDataset (the current
         generation, or a specific retained one).  None when nothing
         consistent is on disk."""
+        from ..capacity import CapacityMap            # deferred: cycle
         from ..partition_store import StoredDataset   # deferred: cycle
         man = self.load_manifest(name, generation)
         if man is None:
@@ -207,13 +208,15 @@ class DurableStore:
         t0 = time.perf_counter()
         cols = self.open_columns(name, man)
         self.io_add(read_s=time.perf_counter() - t0)
+        cm = getattr(man, "capacity_map", None)
         return StoredDataset(
             name=man.name, columns=cols,
             counts=np.asarray(man.counts, np.int64),
             partitioner=decode_partitioner(man.partitioner),
             num_rows=int(man.num_rows), nbytes=int(man.nbytes),
             created_at=float(man.created_at),
-            generation=int(man.generation))
+            generation=int(man.generation),
+            capacity_map=CapacityMap.of(cm) if cm is not None else None)
 
     def load_all(self) -> Dict[str, Any]:
         out = {}

@@ -122,6 +122,11 @@ class Manifest:
     created_at: float = 0.0
     format: int = MANIFEST_FORMAT
     generation_log: List[Dict[str, Any]] = field(default_factory=list)
+    #: per-partition slot capacities of a bucketed (CapacityMap) layout;
+    #: None ⇒ uniform ``capacity``.  Offsets are derived (prefix sum), so
+    #: older readers that drop this field still parse the manifest
+    #: (from_json filters unknown keys) — format stays 1.
+    capacity_map: Optional[List[int]] = None
 
     @classmethod
     def of_dataset(cls, ds, prev: Optional["Manifest"] = None) -> "Manifest":
@@ -141,6 +146,7 @@ class Manifest:
                     "partitioner": (ds.partitioner.signature()
                                     if ds.partitioner is not None else ""),
                     "created_at": float(ds.created_at)})
+        cm = getattr(ds, "capacity_map", None)
         return cls(name=ds.name, generation=int(ds.generation),
                    num_workers=int(ds.num_workers),
                    capacity=int(ds.capacity), num_rows=int(ds.num_rows),
@@ -148,7 +154,9 @@ class Manifest:
                    counts=[int(c) for c in ds.counts],
                    partitioner=encode_partitioner(ds.partitioner),
                    columns=columns, created_at=float(ds.created_at),
-                   generation_log=log)
+                   generation_log=log,
+                   capacity_map=([int(c) for c in cm.capacities]
+                                 if cm is not None else None))
 
     def to_json(self) -> str:
         return json.dumps(self.__dict__, indent=1, sort_keys=True)

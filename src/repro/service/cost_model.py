@@ -75,6 +75,8 @@ class LayoutScore:
     shuffles_delta: float     # Σ runs × (elisions_new − elisions_current)
     io_s: float = 0.0         # durable-tier I/O: rehydrate spilled source +
                               # persist the new generation (DESIGN §10)
+    padding_benefit_s: float = 0.0   # per-window seconds saved by shrinking
+                                     # padded-layout bytes (DESIGN §12)
 
     @property
     def apply_cost_s(self) -> float:
@@ -83,7 +85,7 @@ class LayoutScore:
 
     @property
     def net_s(self) -> float:
-        return self.benefit_s - self.apply_cost_s
+        return self.benefit_s + self.padding_benefit_s - self.apply_cost_s
 
     def worth_it(self, hysteresis: float, horizon: float = 1.0) -> bool:
         """Modeled benefit must clear the one-time apply cost (repartition
@@ -93,7 +95,8 @@ class LayoutScore:
         a per-window rate while the apply cost is paid once, so the gate
         amortizes exactly like Eq. 2 trades the producer-side cost against
         future consumer runs."""
-        return self.benefit_s * horizon > hysteresis * self.apply_cost_s
+        return (self.benefit_s + self.padding_benefit_s) * horizon \
+            > hysteresis * self.apply_cost_s
 
 
 class WhatIfCostModel:
@@ -175,6 +178,14 @@ class WhatIfCostModel:
         """Durable-tier transfer time for ``nbytes`` of segment data."""
         return nbytes / self.io_throughput()
 
+    def padding_overhead_s(self, padded_bytes: float,
+                           valid_bytes: float) -> float:
+        """Per-run seconds a padded layout wastes moving padding (DESIGN
+        §12): the padded-vs-valid byte gap priced at storage throughput —
+        padding is paid on every segment write/spill/rehydrate and every
+        memmap page-in, which the durable calibration already measures."""
+        return max(padded_bytes - valid_bytes, 0.0) / self.io_throughput()
+
     # -- what-if scoring ----------------------------------------------------
     @staticmethod
     def elisions_per_run(candidate: Optional[PartitionerCandidate],
@@ -193,7 +204,11 @@ class WhatIfCostModel:
               window_s: float = float("inf"),
               groups: Optional[Dict] = None,
               durable: bool = False,
-              source_spilled: bool = False) -> LayoutScore:
+              source_spilled: bool = False,
+              current_padded_bytes: float = 0.0,
+              current_valid_bytes: float = 0.0,
+              candidate_padded_bytes: Optional[float] = None,
+              local: bool = False) -> LayoutScore:
         """What-if score of moving ``dataset`` from layout ``current`` to
         ``candidate``, against the run mix observed inside the recency
         window ``[now - window_s, now]`` (drifted-away workloads age out).
@@ -202,7 +217,15 @@ class WhatIfCostModel:
 
         ``durable`` charges persisting the repartitioned generation's
         segments; ``source_spilled`` additionally charges rehydrating the
-        evicted source off disk before it can be shuffled (DESIGN §10)."""
+        evicted source off disk before it can be shuffled (DESIGN §10).
+
+        Padding term (DESIGN §12): pass the current layout's
+        padded/valid bytes plus the candidate layout's estimated padded
+        bytes and the per-run padding-overhead delta is added to the
+        benefit rate — how split/merge decisions pay for themselves even
+        when they change no elision.  ``local=True`` prices the apply as a
+        node-local rewrite (rebucket: same partitioner, no rows cross the
+        network) at I/O throughput instead of a full shuffle."""
         per_shuffle_s = self.shuffle_seconds(ds_bytes, num_workers)
         io_s = 0.0
         if durable:
@@ -227,9 +250,17 @@ class WhatIfCostModel:
                      - self.elisions_per_run(current, dataset, ir))
             shuffles_delta += rate * delta
             benefit += rate * delta * per_shuffle_s
+        padding_benefit = 0.0
+        if candidate_padded_bytes is not None and runs_in_window > 0:
+            padding_benefit = runs_in_window * (
+                self.padding_overhead_s(current_padded_bytes,
+                                        current_valid_bytes)
+                - self.padding_overhead_s(candidate_padded_bytes,
+                                          current_valid_bytes))
         return LayoutScore(
             dataset=dataset, candidate_signature=candidate.signature(),
             benefit_s=benefit,
-            repartition_s=self.repartition_seconds(ds_bytes),
+            repartition_s=(self.io_seconds(ds_bytes) if local
+                           else self.repartition_seconds(ds_bytes)),
             runs_in_window=runs_in_window, shuffles_delta=shuffles_delta,
-            io_s=io_s)
+            io_s=io_s, padding_benefit_s=padding_benefit)

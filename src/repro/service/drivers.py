@@ -26,6 +26,7 @@ from ..api import Session
 from ..core.dsl import Workload
 from ..core.executor import EngineStats
 from ..data.partition_store import PartitionStore
+from ..data.skew import zipf_keys
 from .observer import LogicalClock
 from .optimizer import Autopilot, AutopilotConfig, TickReport
 
@@ -65,8 +66,7 @@ def drift_tables(n_lineitem: int = 6000, n_orders: int = 1500,
     scenario (padding waste shows up in ``StoredDataset.skew()``)."""
     rng = np.random.default_rng(seed)
     if skew > 0:
-        raw = rng.zipf(1.0 + skew, n_lineitem)
-        li_orderkey = np.minimum(raw - 1, n_orders - 1).astype(np.int64)
+        li_orderkey = zipf_keys(n_lineitem, n_orders, 1.0 + skew, rng=rng)
     else:
         li_orderkey = rng.integers(0, n_orders, n_lineitem)
     lineitem = {"orderkey": li_orderkey,

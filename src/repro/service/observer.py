@@ -89,6 +89,8 @@ class Observer:
                 workload, timestamp=self.clock(), latency=stats.wall_s,
                 input_bytes=float(stats.input_bytes),
                 output_bytes=float(stats.output_bytes),
+                padded_bytes=float(getattr(stats, "padded_bytes", 0)),
+                valid_bytes=float(getattr(stats, "valid_bytes", 0)),
                 candidate_stats=dict(stats.candidate_stats or {}))
         self.records_seen += 1
         if self.cost_model is not None and stats.shuffle_bytes \

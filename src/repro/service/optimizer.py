@@ -25,11 +25,16 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from ..core.advisor import (GreedySelector, PartitioningDecision,
                             apply_decision)
 from ..core.features import build_state, candidate_features
 from ..core.history import HistoryStore
-from ..core.partitioner import dedupe, enumerate_candidates
+from ..core.partitioner import (SaltedPartitioner, dedupe,
+                                enumerate_candidates)
+from ..data.capacity import plan_capacity_map
+from ..data.skew import HeavyHitterSketch
 from .cost_model import LayoutScore, WhatIfCostModel
 from .observer import Observer
 
@@ -44,19 +49,30 @@ class AutopilotConfig:
     max_candidates: int = 12       # state-vector rows (advisor action space)
     max_history_records: Optional[int] = None   # auto-compact bound
     datasets: Optional[Tuple[str, ...]] = None  # allowlist (None = all)
+    # -- skew actions (DESIGN §12) -------------------------------------------
+    # None → follow the store (on iff store.adaptive_capacity); True/False
+    # force.  Salting triggers when the dataset's fill skew reaches
+    # skew_threshold AND the observed hottest-key share (heavy-hitter
+    # sketch in the candidate stats) reaches hot_key_fraction.
+    skew_actions: Optional[bool] = None
+    hot_key_fraction: float = 0.25
+    skew_threshold: float = 2.0
+    salt_factor: int = 4
 
 
 @dataclass
 class AppliedDecision:
-    """One autonomous repartition: the advisor decision, its what-if score,
-    and what actually happened when it was applied."""
+    """One autonomous layout action: the advisor decision (None for a
+    rebucket — no candidate changes), its what-if score, and what actually
+    happened when it was applied."""
     dataset: str
-    decision: PartitioningDecision
+    decision: Optional[PartitioningDecision]
     score: LayoutScore
     generation: int                # generation published by the swap
     moved_bytes: int
     repartition_wall_s: float
-    path: str                      # "d2d" | "host"
+    path: str                      # "d2d" | "host" | "rebucket"
+    kind: str = "repartition"      # "repartition" | "salt" | "rebucket"
 
 
 @dataclass
@@ -105,6 +121,116 @@ class StorageOptimizer:
                 cand_groups.setdefault(c.signature(), []).append(groups[sig])
         return dedupe(cands), cand_groups, rel_groups
 
+    # -- skew actions: hot-key salting + capacity rebucketing (DESIGN §12) ---
+    def _skew_enabled(self) -> bool:
+        if self.cfg.skew_actions is not None:
+            return bool(self.cfg.skew_actions)
+        return bool(getattr(self.store, "adaptive_capacity", False))
+
+    def _observed_hot_fraction(self, cands, now: float) -> float:
+        """Largest heavy-hitter share the Observer's per-candidate stats
+        pass measured for any of this dataset's candidates inside the
+        recency window — a lower bound (Misra-Gries), so acting on it
+        never over-triggers a split."""
+        sigs = {c.signature() for c in cands}
+        best = 0.0
+        for rec in self.history.records:
+            if rec.timestamp < now - self.cfg.window_s:
+                continue
+            for sig, st in rec.candidate_stats.items():
+                if sig in sigs:
+                    best = max(best, float(st.get("max_key_fraction", 0.0)))
+        return best
+
+    def _consider_skew(self, name: str, ds, cands, groups, now: float,
+                       report: TickReport):
+        """Price the two skew actions for one dataset; return a queued
+        ``(kind, name, decision, score)`` or None.  Salting is tried first
+        (it changes which rows go where, fixing the imbalance at the
+        source); rebucketing is the fallback that keeps the partitioner
+        and only re-shapes per-partition capacity."""
+        cur_sig = ds.partitioner.signature() if ds.partitioner else ""
+        # -- hot-key splitting ------------------------------------------------
+        base = next((c for c in cands if c.is_keyed and c.graph is not None),
+                    None)
+        if (base is not None and "salt" not in cur_sig
+                and ds.skew() >= self.cfg.skew_threshold
+                and self._observed_hot_fraction(cands, now)
+                >= self.cfg.hot_key_fraction):
+            # score with an empty-keyed preview: a salted signature never
+            # matches Alg. 4, so its elision count (0) prices the benefit
+            # the split gives up, against the padding bytes it wins back
+            preview = SaltedPartitioner(
+                graph=base.graph, strategy=base.strategy,
+                source_dataset=base.source_dataset, origin=base.origin,
+                hot_keys=(), salt_factor=self.cfg.salt_factor)
+            score = self.cost_model.score(
+                name, float(ds.nbytes), ds.num_workers, preview,
+                ds.partitioner, self.history, now=now,
+                window_s=self.cfg.window_s, groups=groups,
+                durable=self.store.is_durable and self.store.autoflush,
+                source_spilled=self.store.is_durable
+                and self.store.is_spilled(name),
+                current_padded_bytes=float(ds.padded_bytes),
+                current_valid_bytes=float(ds.valid_bytes),
+                # salted counts are near-balanced; power-of-two rounding
+                # bounds the residual padding at 2×, 1.25× is the midpoint
+                candidate_padded_bytes=1.25 * float(ds.valid_bytes))
+            report.considered.append((name, preview.signature(), score))
+            if (score.runs_in_window >= self.cfg.min_runs
+                    and score.worth_it(self.cfg.hysteresis,
+                                       self.cfg.horizon_windows)):
+                decision = PartitioningDecision(
+                    dataset=name, candidate=base, features=[],
+                    consumers=[], action_index=-1, state=None,
+                    elapsed_s=0.0)
+                return ("salt", name, decision, score)
+        # -- capacity rebucketing ---------------------------------------------
+        if ds.partitioner is None:
+            return None
+        cmap = plan_capacity_map(
+            ds.counts, threshold=getattr(self.store, "capacity_threshold",
+                                         0.75))
+        if cmap == ds.capacity_map or \
+                (cmap is None and ds.capacity_map is None):
+            return None
+        slots = max(ds.total_slots, 1)
+        per_slot = float(ds.padded_bytes) / slots
+        new_slots = (cmap.total_slots if cmap is not None
+                     else ds.num_workers * int(ds.counts.max()))
+        score = self.cost_model.score(
+            name, float(ds.nbytes), ds.num_workers, ds.partitioner,
+            ds.partitioner, self.history, now=now,
+            window_s=self.cfg.window_s, groups=groups,
+            durable=self.store.is_durable and self.store.autoflush,
+            source_spilled=False,   # rebucket reads the live generation
+            current_padded_bytes=float(ds.padded_bytes),
+            current_valid_bytes=float(ds.valid_bytes),
+            candidate_padded_bytes=per_slot * new_slots,
+            local=True)             # same partitioner: node-local rewrite
+        report.considered.append((name, "rebucket", score))
+        if (score.runs_in_window >= self.cfg.min_runs
+                and score.worth_it(self.cfg.hysteresis,
+                                   self.cfg.horizon_windows)):
+            return ("rebucket", name, None, score)
+        return None
+
+    def _make_salted(self, name: str, base) -> Optional[SaltedPartitioner]:
+        """Materialize the salt decision at apply time: sketch the live key
+        column for its heavy hitters (the tick gate used the Observer's
+        windowed stats; the actual keys may have drifted since)."""
+        ds = self.store.read(name)
+        keys = np.asarray(base.key_fn()(ds.gather())).reshape(-1)
+        sk = HeavyHitterSketch(k=8).update(keys)
+        hot = tuple(sorted(k for k, _ in
+                           sk.heavy_hitters(self.cfg.hot_key_fraction)))
+        if not hot:
+            return None
+        return SaltedPartitioner(
+            graph=base.graph, strategy=base.strategy,
+            source_dataset=base.source_dataset, origin=base.origin,
+            hot_keys=hot, salt_factor=self.cfg.salt_factor)
+
     # -- one deterministic pass over the store -------------------------------
     def tick(self) -> TickReport:
         """Score every dataset against one calibration snapshot, then apply
@@ -119,7 +245,9 @@ class StorageOptimizer:
         now = peek() if peek is not None else self.clock()
         self._tick_no += 1
         report = TickReport(tick=self._tick_no, now=now)
-        to_apply: List[Tuple[PartitioningDecision, LayoutScore]] = []
+        # (kind, dataset, decision-or-None, score)
+        to_apply: List[Tuple[str, str,
+                             Optional[PartitioningDecision], LayoutScore]] = []
         # one O(records²) skeleton build per tick, shared by every dataset's
         # enumeration and what-if score
         groups, _ = self.history.skeleton_graph()
@@ -131,64 +259,85 @@ class StorageOptimizer:
                 continue
             ds = self.store.read(name)
             cands, cand_groups, rel_groups = self._enumerate(name, groups)
-            if not cands:
-                continue
+            queued = False
+            if cands:
+                # policy pick (greedy Eq. 2 / DRL — one interface)
+                t0 = time.perf_counter()
+                feats = [candidate_features(c,
+                                            cand_groups.get(c.signature(), []),
+                                            self.history, now)
+                         for c in cands]
+                state = build_state(feats, float(ds.nbytes),
+                                    self.cfg.max_candidates, now=now)
+                idx = self.selector.select(feats, rel_groups,
+                                           float(ds.nbytes), state)
+                idx = max(0, min(int(idx), len(feats) - 1))
+                cand = feats[idx].candidate
+                decision = PartitioningDecision(
+                    dataset=name, candidate=cand, features=feats,
+                    consumers=[g.ir_signature for g in rel_groups],
+                    action_index=idx, state=state,
+                    elapsed_s=time.perf_counter() - t0)
 
-            # policy pick (greedy Eq. 2 / DRL — one interface)
-            t0 = time.perf_counter()
-            feats = [candidate_features(c,
-                                        cand_groups.get(c.signature(), []),
-                                        self.history, now)
-                     for c in cands]
-            state = build_state(feats, float(ds.nbytes),
-                                self.cfg.max_candidates, now=now)
-            idx = self.selector.select(feats, rel_groups, float(ds.nbytes),
-                                       state)
-            idx = max(0, min(int(idx), len(feats) - 1))
-            cand = feats[idx].candidate
-            decision = PartitioningDecision(
-                dataset=name, candidate=cand, features=feats,
-                consumers=[g.ir_signature for g in rel_groups],
-                action_index=idx, state=state,
-                elapsed_s=time.perf_counter() - t0)
+                # what-if gate against the live layout; a durable store also
+                # pays segment I/O (persist the new generation, rehydrate a
+                # spilled source) — priced by the calibrated io throughput
+                score = self.cost_model.score(
+                    name, float(ds.nbytes), ds.num_workers, cand,
+                    ds.partitioner, self.history, now=now,
+                    window_s=self.cfg.window_s, groups=groups,
+                    # only charge the persist when applying will actually
+                    # pay it (autoflush); batched stores defer that cost
+                    durable=self.store.is_durable and self.store.autoflush,
+                    source_spilled=self.store.is_durable
+                    and self.store.is_spilled(name))
+                report.considered.append((name, cand.signature(), score))
+                if (not (ds.partitioner is not None and
+                         ds.partitioner.signature() == cand.signature())
+                        and score.runs_in_window >= self.cfg.min_runs
+                        and score.worth_it(self.cfg.hysteresis,
+                                           self.cfg.horizon_windows)):
+                    to_apply.append(("repartition", name, decision, score))
+                    queued = True
+            # skew phase (DESIGN §12): when no layout change was queued,
+            # consider hot-key salting and capacity rebucketing — actions
+            # that fix padding waste rather than elide shuffles
+            if not queued and self._skew_enabled():
+                skew = self._consider_skew(name, ds, cands, groups, now,
+                                           report)
+                if skew is not None:
+                    to_apply.append(skew)
 
-            # what-if gate against the live layout; a durable store also
-            # pays segment I/O (persist the new generation, rehydrate a
-            # spilled source) — priced by the calibrated io throughput
-            score = self.cost_model.score(
-                name, float(ds.nbytes), ds.num_workers, cand,
-                ds.partitioner, self.history, now=now,
-                window_s=self.cfg.window_s, groups=groups,
-                # only charge the persist when applying will actually pay
-                # it (autoflush); batched-flush stores defer that cost
-                durable=self.store.is_durable and self.store.autoflush,
-                source_spilled=self.store.is_durable
-                and self.store.is_spilled(name))
-            report.considered.append((name, cand.signature(), score))
-            if (ds.partitioner is not None
-                    and ds.partitioner.signature() == cand.signature()):
-                continue                      # already laid out this way
-            if score.runs_in_window < self.cfg.min_runs:
-                continue
-            if not score.worth_it(self.cfg.hysteresis,
-                                  self.cfg.horizon_windows):
-                continue
-            to_apply.append((decision, score))
-
-        for decision, score in to_apply:
+        for kind, name, decision, score in to_apply:
             # apply: materialize off to the side, atomically flip (swap)
-            name = decision.dataset
             ds_bytes = float(self.store.read(name).nbytes)
             io0 = self.store.io_snapshot()
             t1 = time.perf_counter()
-            new, moved = apply_decision(self.store, decision, mesh=self.mesh)
+            if kind == "repartition":
+                new, moved = apply_decision(self.store, decision,
+                                            mesh=self.mesh)
+            elif kind == "salt":
+                salted = self._make_salted(name, decision.candidate)
+                if salted is None:
+                    continue   # sketch found no hot key at apply time
+                decision = PartitioningDecision(
+                    dataset=name, candidate=salted,
+                    features=decision.features,
+                    consumers=decision.consumers, action_index=-1,
+                    state=decision.state, elapsed_s=decision.elapsed_s)
+                new, moved = self.store.repartition(
+                    self.store.read(name), salted, mesh=self.mesh,
+                    swap=True)
+            else:   # rebucket: same partitioner, node-local re-layout
+                new, moved = self.store.rebucket(name)
             wall = time.perf_counter() - t1
             # the wall includes any autoflush persist; attribute that slice
             # to the io calibration and only the remainder to the shuffle,
             # so score()'s repartition_s + io_s never double-charges
             io_wall = self._feed_io_calibration(io0)
-            self.cost_model.observe_repartition(ds_bytes,
-                                                max(wall - io_wall, 0.0))
+            if kind != "rebucket":   # rebucket moves 0 bytes — no sample
+                self.cost_model.observe_repartition(
+                    ds_bytes, max(wall - io_wall, 0.0))
             self._cooldown[name] = self.cfg.cooldown_ticks
             path = "host"
             if self.store.write_log and \
@@ -197,7 +346,7 @@ class StorageOptimizer:
             applied = AppliedDecision(
                 dataset=name, decision=decision, score=score,
                 generation=new.generation, moved_bytes=moved,
-                repartition_wall_s=wall, path=path)
+                repartition_wall_s=wall, path=path, kind=kind)
             report.applied.append(applied)
             self._catalog_log(applied, now)
         if self.cfg.max_history_records is not None:
@@ -234,7 +383,9 @@ class StorageOptimizer:
         self.store.durable.log_decision({
             "tick": self._tick_no, "now": float(now),
             "dataset": applied.dataset,
-            "candidate": applied.decision.candidate.signature(),
+            "kind": applied.kind,
+            "candidate": (applied.decision.candidate.signature()
+                          if applied.decision is not None else ""),
             "generation": applied.generation,
             "moved_bytes": int(applied.moved_bytes),
             "repartition_wall_s": float(applied.repartition_wall_s),

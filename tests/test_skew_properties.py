@@ -1,0 +1,79 @@
+"""Hypothesis property sweeps for skew-adaptive layouts (DESIGN §12).
+
+Split/merge (bucketed) layouts must be bit-for-bit identical to the
+uniform padded layout for *any* keys — every payload dtype the workloads
+use, arbitrary skew (small key domains collapse most rows into one
+partition), zero-row partitions (zero-capacity buckets), and the d2d vs
+host write routes.  Needs the hypothesis dev extra; self-skips without it.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
+from hypothesis import given, settings, strategies as st
+
+import repro.data.device_repartition as dr
+from repro.core import author_integrator, enumerate_candidates
+from repro.data.capacity import CapacityMap, valid_slot_index
+from repro.data.partition_store import PartitionStore
+from repro.data.skew import zipf_keys
+
+PAYLOAD_DTYPES = (np.float32, np.int32, np.float64, np.int64)
+
+
+@given(st.integers(2, 16),
+       st.integers(0, len(PAYLOAD_DTYPES) - 1),
+       st.integers(0, 3),                      # key domain exponent → skew
+       st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=300))
+@settings(max_examples=20, deadline=None)
+def test_bucketed_scatter_rows_equal_uniform(m, pdt, dom, raw):
+    keys = np.array(raw, np.int64) % (4 ** dom + 1)
+    n = keys.shape[0]
+    data = {"k": keys,
+            "v": (np.arange(n) * 3).astype(PAYLOAD_DTYPES[pdt]),
+            "mat": np.arange(2 * n, dtype=np.float32).reshape(n, 2)}
+    pids_d, hist = dr.device_partition_ids(keys, m)
+    counts = np.asarray(hist).astype(np.int64)
+    cmap = CapacityMap.from_counts(counts)     # force bucketing, including
+                                               # zero-capacity partitions
+    uni = dr.device_scatter_padded(data, pids_d, counts)
+    buck = dr.device_scatter_padded(data, pids_d, counts, capacity_map=cmap)
+    cap = int(counts.max())
+    uni_off = np.arange(m, dtype=np.int64) * cap
+    vidx_u = valid_slot_index(counts, uni_off)
+    vidx_b = valid_slot_index(counts, cmap.offsets)
+    for k, v in data.items():
+        got_u = np.asarray(uni[k]).reshape((m * cap,) + v.shape[1:])[vidx_u]
+        got_b = np.asarray(buck[k])[vidx_b]
+        assert got_b.dtype == v.dtype, k
+        np.testing.assert_array_equal(got_u, got_b, err_msg=k)
+
+
+@given(st.integers(2, 8), st.floats(1.05, 2.5),
+       st.integers(40, 300), st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_adaptive_store_gather_equals_uniform_store(m, alpha, n, device):
+    """The same keyed write through an adaptive store (capacity map
+    allowed) and a plain store (always uniform) gathers back identical
+    flat rows — host path and d2d path both, 64-bit hybrid included."""
+    keys = zipf_keys(n, n, alpha, seed=7)
+    cols = {"author": keys,
+            "v64": np.arange(n, dtype=np.int64),     # hybrid 64-bit path
+            "v32": np.arange(n, dtype=np.float32)}
+    cand = enumerate_candidates(author_integrator().graph, "submissions")[0]
+    backend = "device" if device else "host"
+    out = {}
+    for adaptive in (False, True):
+        store = PartitionStore(m, backend=backend,
+                               adaptive_capacity=adaptive)
+        ds = store.write("submissions", cols, cand)
+        out[adaptive] = (ds, ds.gather())
+    ds_u, flat_u = out[False]
+    ds_a, flat_a = out[True]
+    assert ds_u.capacity_map is None
+    np.testing.assert_array_equal(ds_u.counts, ds_a.counts)
+    for k in flat_u:
+        assert flat_a[k].dtype == flat_u[k].dtype, k
+        np.testing.assert_array_equal(np.asarray(flat_u[k]),
+                                      np.asarray(flat_a[k]), err_msg=k)
