@@ -378,6 +378,71 @@ def plan_compile_vs_exec(workers: int = 8):
              f"dev_plan_stats={plan_cache_stats()['plans']}plans")
 
 
+# -- observability overhead (DESIGN §13): tracing off/sampled/full rows -----
+
+def tracing_overhead(workers: int = 8):
+    """The §13 overhead contract: with tracing **off**, the plan-cache-hit
+    run path must stay within 2%.  The assert is deterministic — spans a
+    hit-run would record × the measured per-disabled-span-call cost,
+    against the measured hit wall — instead of differencing two noisy
+    end-to-end walls (whose jitter dwarfs a nanosecond-scale guard)."""
+    from repro import obs
+    from repro.api import Session
+    from .bench_reddit import make_data
+
+    subs, auths = make_data(scale(100_000, 5_000), scale(25_000, 1_200))
+    store = PartitionStore(workers)
+    store.write("submissions", subs)
+    store.write("authors", auths)
+    sess = Session(store)
+    wl = author_integrator()
+    sess.run(wl)                                   # compile + trace once
+
+    def best_run(repeats=5):
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = sess.run(wl)
+            best = min(best, time.perf_counter() - t0)
+            assert res.stats.plan_cache_hit
+        return best
+
+    obs.disable()
+    t_off = best_run()
+    # disabled-span unit cost: one module-global load + the shared no-op
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs.span("bench.noop"):
+            pass
+    per_call = (time.perf_counter() - t0) / n
+    # spans a single cache-hit run records (the sites the off-path pays)
+    obs.enable("full")
+    obs.clear_spans()
+    sess.run(wl)
+    spans_per_run = len(obs.finished_spans())
+    t_full = best_run()
+    obs.configure(mode="sampled", sample_every=16)
+    t_sampled = best_run()
+    obs.disable()
+    obs.clear_spans()
+
+    modeled = spans_per_run * per_call
+    budget = 0.02 * t_off
+    assert modeled < budget, (
+        f"tracing-off overhead blew the 2% budget: {spans_per_run} spans x "
+        f"{per_call * 1e9:.0f}ns = {modeled * 1e6:.2f}us vs budget "
+        f"{budget * 1e6:.2f}us (hit wall {t_off * 1e6:.0f}us)")
+    emit("tracing_off_cache_hit", t_off * 1e6,
+         f"spans/run={spans_per_run} "
+         f"per_disabled_span={per_call * 1e9:.0f}ns "
+         f"modeled_overhead={modeled / t_off * 100:.3f}% (budget 2%)")
+    emit("tracing_sampled_cache_hit", t_sampled * 1e6,
+         f"sample_every=16 vs_off={t_sampled / t_off:.2f}x")
+    emit("tracing_full_cache_hit", t_full * 1e6,
+         f"vs_off={t_full / t_off:.2f}x spans/run={spans_per_run}")
+
+
 def main():
     offline_overheads()
     online_consumer_matching()
@@ -386,6 +451,7 @@ def main():
     d2d_repartition()
     device_repartition_skew()
     plan_compile_vs_exec()
+    tracing_overhead()
 
 
 if __name__ == "__main__":

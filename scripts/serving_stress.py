@@ -1,28 +1,41 @@
-"""Time-boxed serving-tier stress smoke (CI; DESIGN §11).
+"""Time-boxed serving-tier stress smoke (CI; DESIGN §11 + §13).
 
 One shared PartitionStore, CLIENTS concurrent clients hammering a
 ServingFrontend while a background thread keeps flipping the scanned
-table's layout generation.  Every result must be bit-identical to the
-serial baseline and nothing may fail — the serial-equivalence guarantee
-the serving tier is built on, as a standalone executable assertion.
+table's layout generation and a background Autopilot ticks on its own
+daemon thread.  Every result must be bit-identical to the serial
+baseline and nothing may fail — the serial-equivalence guarantee the
+serving tier is built on, as a standalone executable assertion.
 
-Usage: python scripts/serving_stress.py [seconds] [clients]
-Exits non-zero on any divergence, error or deadline overrun.
+The whole run is traced (DESIGN §13): at exit it must export one
+coherent Chrome-trace JSON — ticket spans parented across the pool
+threads, Autopilot ticks on the optimizer thread — plus a metrics
+snapshot (JSON + Prometheus text).  Pass an artifacts directory to keep
+them (CI uploads these).
+
+Usage: python scripts/serving_stress.py [seconds] [clients] [artifacts_dir]
+Exits non-zero on any divergence, error, deadline overrun, or an
+incoherent trace.
 """
 
+import json
+import os
 import sys
 import threading
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.api import Session
 from repro.core import Workload, enumerate_candidates
 from repro.data.partition_store import PartitionStore
+from repro.obs.export import to_chrome_trace
 from repro.service import aggregate_result, drift_tables
 
 BUDGET_S = float(sys.argv[1]) if len(sys.argv) > 1 else 20.0
 CLIENTS = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+ARTIFACTS = sys.argv[3] if len(sys.argv) > 3 else None
 
 
 def query() -> Workload:
@@ -35,7 +48,40 @@ def query() -> Workload:
     return wl
 
 
+def _check_trace_coherence(doc) -> list:
+    """The §13 acceptance checks on the exported Chrome trace: one
+    consistent document whose ticket spans parent across the pool
+    boundary and whose Autopilot ticks live on the optimizer thread."""
+    problems = []
+    ev = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    by_id = {e["args"]["span_id"]: e for e in ev}
+    tickets = [e for e in ev if e["name"] == "serve.ticket"]
+    ticks = [e for e in ev if e["name"] == "autopilot.tick"]
+    threads = {e["tid"]: e["args"]["name"]
+               for e in doc["traceEvents"] if e.get("ph") == "M"}
+    if not tickets:
+        problems.append("no serve.ticket spans in trace")
+    cross = 0
+    for t in tickets:
+        parent = by_id.get(t["args"].get("parent_id"))
+        if parent is not None and parent["tid"] != t["tid"]:
+            cross += 1
+    if not cross:
+        problems.append("no ticket span parented across the pool handoff")
+    if not ticks:
+        problems.append("no autopilot.tick spans in trace")
+    elif not all("autopilot" in threads.get(e["tid"], "")
+                 for e in ticks):
+        problems.append("autopilot.tick span not on the optimizer thread")
+    flows = [e for e in doc["traceEvents"] if e.get("ph") in ("s", "f")]
+    if len([e for e in flows if e["ph"] == "s"]) != \
+            len([e for e in flows if e["ph"] == "f"]):
+        problems.append("unpaired flow events")
+    return problems
+
+
 def main() -> int:
+    obs.enable("full")
     store = PartitionStore(num_workers=4, backend="host",
                            max_retired_generations=16)
     sess = Session(store)
@@ -45,6 +91,8 @@ def main() -> int:
 
     want = aggregate_result(sess.run(query()).values, query())
     front = sess.serve(max_workers=CLIENTS, max_queue=4 * CLIENTS)
+    ap = sess.autopilot()
+    ap.start(period_s=0.5)          # ticks on the lachesis-autopilot thread
     cand = enumerate_candidates(query().graph, "lineitem")[0]
     deadline = time.perf_counter() + BUDGET_S
     stop = threading.Event()
@@ -77,13 +125,31 @@ def main() -> int:
         t.join(timeout=BUDGET_S + 120)
     stop.set()
     ft.join(60)
+    ap.stop()
     stuck = [t for t in threads if t.is_alive()]
     st = front.stats()
+    metrics_text = front.metrics_text()
     front.close(wait=not stuck)
+
+    # -- observability artifacts (DESIGN §13) -------------------------------
+    doc = sess.export_trace()
+    trace_problems = _check_trace_coherence(doc)
+    if ARTIFACTS:
+        os.makedirs(ARTIFACTS, exist_ok=True)
+        with open(os.path.join(ARTIFACTS, "stress_trace.json"), "w") as f:
+            json.dump(doc, f)
+        sess.metrics_registry.write_snapshot(
+            os.path.join(ARTIFACTS, "stress_metrics.json"))
+        with open(os.path.join(ARTIFACTS, "stress_metrics.prom"), "w") as f:
+            f.write(metrics_text)
+    n_spans = doc["otherData"]["spans"]
+    ticks = len(ap.optimizer.reports)
 
     print(f"serving_stress: clients={CLIENTS} budget={BUDGET_S}s "
           f"completed={st['completed']} coalesced={st['coalesced']} "
-          f"flips={flips[0]} failed={st['failed']}")
+          f"flips={flips[0]} failed={st['failed']} "
+          f"autopilot_ticks={ticks} trace_spans={n_spans} "
+          f"dropped={doc['otherData']['dropped']}")
     if errors:
         print(f"FAIL: {len(errors)} clients diverged/errored: {errors[:3]}")
         return 1
@@ -96,7 +162,18 @@ def main() -> int:
     if flips[0] < 2:
         print("FAIL: background flipper never ran — stress was vacuous")
         return 1
-    print("OK: bit-identical under concurrency + background repartition")
+    if ap.optimizer.last_error is not None:
+        print(f"FAIL: autopilot thread died: {ap.optimizer.last_error!r}")
+        return 1
+    if trace_problems:
+        print(f"FAIL: trace incoherent: {trace_problems}")
+        return 1
+    if "serving_completed" not in metrics_text or \
+            "serving_latency_seconds_bucket" not in metrics_text:
+        print("FAIL: metrics exposition missing serving series")
+        return 1
+    print("OK: bit-identical under concurrency + background repartition; "
+          "trace + metrics exported coherently")
     return 0
 
 

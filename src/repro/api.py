@@ -45,6 +45,9 @@ from .core.executor import (EngineStats, Executor, StalePlanError, TableVal,
                             plan_and_execute)
 from .core.planner import LogicalPlan, PhysicalPlan, Planner
 from .data.partition_store import PartitionStore, StoredDataset
+from .obs import metrics as _obs_metrics
+from .obs import tracer as _obs_tracer
+from .obs.export import to_chrome_trace, write_chrome_trace
 
 __all__ = ["Session", "RunResult", "UnknownBackendError", "StalePlanError"]
 
@@ -96,7 +99,8 @@ class Session:
                  store_path: Optional[str] = None,
                  memory_budget_bytes: Optional[int] = None,
                  autoflush: bool = True,
-                 adaptive_capacity: bool = False):
+                 adaptive_capacity: bool = False,
+                 metrics: Optional["_obs_metrics.MetricsRegistry"] = None):
         """``store_path`` (DESIGN §10) backs the session's store with the
         durable tier: an existing store directory is reattached (its
         layouts, partitioner signatures and generation numbers carry over,
@@ -125,12 +129,19 @@ class Session:
         self.net_bandwidth = net_bandwidth
         self.history = history
         self.run_hooks: List[Callable[[Any, EngineStats], None]] = []
+        self.metrics_registry = metrics or _obs_metrics.REGISTRY
         self.planner = Planner(store, registry=self.registry,
                                matching=matching,
-                               cache_capacity=plan_cache_capacity)
+                               cache_capacity=plan_cache_capacity,
+                               metrics=self.metrics_registry)
         self.executor = Executor(store, interpret=interpret)
         self._current: Optional[Workload] = None
         self._wl_counter = 0
+        # facades attached via autopilot()/serve(), weakly held: the
+        # explain_decisions()/export_trace() surfaces read through them
+        self._autopilots: List[Any] = []
+        _register_process_collectors(self.metrics_registry)
+        store.register_metrics(self.metrics_registry)
 
     # -- backend / knobs -----------------------------------------------------
     @property
@@ -239,10 +250,15 @@ class Session:
         transparent re-plan, never an error."""
         wl = self._resolve_wl(workload)
         history = self.history if history is None else history
-        vals, stats, plan = plan_and_execute(
-            self.planner, self.executor, wl, self._resolve_backend(backend),
-            history=history, hooks=tuple(self.run_hooks),
-            timestamp=timestamp)
+        with _obs_tracer.span("session.run", "session",
+                              workload=getattr(wl, "app_id", "?")) as sp:
+            vals, stats, plan = plan_and_execute(
+                self.planner, self.executor, wl,
+                self._resolve_backend(backend),
+                history=history, hooks=tuple(self.run_hooks),
+                timestamp=timestamp)
+            sp.set(cache_hit=stats.plan_cache_hit,
+                   wall_ms=round(stats.wall_s * 1e3, 3))
         if workload is None and wl is self._current:
             self._current = None
         return RunResult(values=vals, stats=stats, plan=plan, workload=wl)
@@ -295,13 +311,56 @@ class Session:
     def store_path(self) -> Optional[str]:
         return self.store.root if self.store.is_durable else None
 
+    # -- observability ---------------------------------------------------------
+    def metrics(self) -> Dict[str, Any]:
+        """Versioned JSON snapshot of every metric the session's registry
+        holds (planner cache, store write/IO totals, ShufflePlan cache,
+        serving counters when a frontend shares the registry)."""
+        return self.metrics_registry.snapshot()
+
+    def metrics_text(self) -> str:
+        """The same snapshot in Prometheus text exposition format."""
+        return self.metrics_registry.prometheus_text()
+
+    def export_trace(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """Export the tracer's finished spans as Chrome ``trace_event``
+        JSON (open in Perfetto / ``chrome://tracing``).  Writes to
+        ``path`` when given; always returns the document.  Requires
+        tracing on: ``repro.obs.enable()``."""
+        meta = {"session_backend": self.backend,
+                "num_workers": self.num_workers}
+        if path is not None:
+            return write_chrome_trace(path, metadata=meta)
+        return to_chrome_trace(metadata=meta)
+
+    def explain_decisions(self, limit: int = 50) -> List[Dict[str, Any]]:
+        """Structured why-records for the Autopilot's recent decisions:
+        every candidate's priced score and which gate (hysteresis,
+        worth-it, skew threshold) accepted or rejected it.  Reads the
+        in-memory records of attached autopilots first, then falls back
+        to the durable ``decisions.log`` (kind=why rows) so a fresh
+        session on a durable store can still explain past decisions."""
+        recs: List[Dict[str, Any]] = []
+        for ap in self._autopilots:
+            explain = getattr(ap, "explain", None)
+            if explain is not None:
+                recs.extend(explain())
+        if not recs and self.store.is_durable:
+            for row in self.store.durable.decisions():
+                if row.get("kind") == "why":
+                    # ticks batch their records into one JSONL row
+                    recs.extend(row.get("records") or [])
+        return recs[-limit:]
+
     # -- service attach --------------------------------------------------------
     def autopilot(self, **kw):
         """Attach an online storage optimizer (observer + cost model +
         decide/apply loop) to this session; returns the
         :class:`~repro.service.Autopilot`."""
         from .service import Autopilot
-        return Autopilot(self, **kw)
+        ap = Autopilot(self, **kw)
+        self._autopilots.append(ap)
+        return ap
 
     def serve(self, **kw):
         """Open a concurrent serving frontend over this session's store
@@ -324,3 +383,27 @@ class Session:
 
     def _resolve_backend(self, backend: Optional[str]) -> Backend:
         return self._backend if backend is None else self.registry.get(backend)
+
+
+class _ProcessCollectors:
+    """Anchor object for process-global metric callbacks (the jitted
+    ShufflePlan cache and the tracer's own health counters are
+    process-wide, not per-session).  One anchor per registry, strongly
+    held on the registry so the weakref callback stays alive."""
+
+    def samples(self):
+        from .data.device_repartition import plan_cache_stats as dev_stats
+        for k, v in dev_stats().items():
+            if isinstance(v, (int, float)):
+                yield f"shuffleplan_cache_{k}", {}, v
+        st = _obs_tracer.TRACER.stats()
+        yield "tracer_spans_buffered", {}, st["buffered"]
+        yield "tracer_spans_dropped_total", {}, st["dropped"]
+
+
+def _register_process_collectors(
+        registry: "_obs_metrics.MetricsRegistry") -> None:
+    if getattr(registry, "_process_collectors", None) is None:
+        anchor = _ProcessCollectors()
+        registry._process_collectors = anchor        # keeps weakref alive
+        registry.register_callback(anchor, _ProcessCollectors.samples)

@@ -27,6 +27,7 @@ from ..data.device_repartition import device_flat_columns, \
     device_rebucket_full
 from ..data.partition_store import RetiredGenerationError
 from ..data.skew import HeavyHitterSketch
+from ..obs.tracer import span as _span
 from .ir import _mix_hash, resolve_fn
 
 Columns = Dict[str, np.ndarray]
@@ -142,6 +143,20 @@ class Executor:
         user-visible through hooks and history records).  ``planning_s`` /
         ``cache_hit`` carry the caller's planning cost into the stats so
         hooks observe them."""
+        with _span("exec.run", "exec", workload=plan.workload_id,
+                   cache_hit=cache_hit) as rsp:
+            vals, stats = self._execute(
+                plan, history=history, hooks=hooks, timestamp=timestamp,
+                workload=workload, planning_s=planning_s,
+                cache_hit=cache_hit)
+            rsp.set(wall_ms=round(stats.wall_s * 1e3, 3),
+                    shuffles=stats.shuffles_performed,
+                    elided=stats.shuffles_elided)
+            return vals, stats
+
+    def _execute(self, plan, *, history, hooks, timestamp, workload,
+                 planning_s, cache_hit) -> Tuple[Dict[int, Any],
+                                                 "EngineStats"]:
         workload = workload if workload is not None else plan.workload
         g = plan.graph
         stats = EngineStats()
@@ -188,49 +203,63 @@ class Executor:
             kind = step.kind
             parents = g.parents(step.nid)
 
-            if kind == "scan":
-                # the generation resolved by the up-front snapshot (pinned
-                # plans: exactly the layout the elisions were planned for),
-                # held as an object — immune to concurrent pointer flips
-                ds = scans[step.nid]
-                flat = ds.gather()
-                dev = device_flat_columns(ds) if step.device_relay else None
-                stats.input_bytes += ds.nbytes
-                stats.padded_bytes += int(getattr(ds, "padded_bytes", 0))
-                stats.valid_bytes += int(getattr(ds, "valid_bytes", 0))
-                vals[step.nid] = TableVal(flat, ds.counts.copy(),
-                                          ds.partitioner, device_columns=dev)
-            elif kind == "partition":
-                vals[step.nid] = self._exec_partition(step, g, vals, stats)
-            elif kind == "join":
-                vals[step.nid] = self._exec_join(
-                    vals[parents[0]], vals[parents[1]], step.projection)
-            elif kind == "aggregate":
-                vals[step.nid] = self._exec_aggregate(vals[parents[0]],
-                                                      node.params)
-            elif kind == "apply":
-                vals[step.nid] = self._exec_map(vals[parents[0]],
-                                                node.params["fn"])
-            elif kind == "flatten":
-                vals[step.nid] = self._exec_flatten(vals[parents[0]])
-            elif kind == "filter":
-                vals[step.nid] = self._exec_filter(vals[parents[0]],
-                                                   vals[parents[1]])
-            elif kind == "write":
-                tv: TableVal = vals[parents[0]]
-                cols = {k: v for k, v in tv.columns.items()
-                        if k != "__key__"}
-                self.store.write_layout(step.dataset, cols,
-                                        tv.counts, tv.partitioner,
-                                        device_columns=tv.device_columns)
-                stats.output_bytes += int(sum(v.nbytes for v in cols.values()))
-                vals[step.nid] = tv
-            else:
-                # lambda nodes: evaluate over parent values (columns/TableVal)
-                fn = resolve_fn(node.label, node.params)
-                args = [vals[p].columns if isinstance(vals[p], TableVal)
-                        else vals[p] for p in parents]
-                vals[step.nid] = fn(*args)
+            with _span("exec." + kind, "exec", nid=step.nid,
+                       label=node.label) as ssp:
+                if kind == "scan":
+                    # the generation resolved by the up-front snapshot
+                    # (pinned plans: exactly the layout the elisions were
+                    # planned for), held as an object — immune to
+                    # concurrent pointer flips
+                    ds = scans[step.nid]
+                    flat = ds.gather()
+                    dev = device_flat_columns(ds) if step.device_relay \
+                        else None
+                    stats.input_bytes += ds.nbytes
+                    stats.padded_bytes += int(ds.padded_bytes)
+                    stats.valid_bytes += int(ds.valid_bytes)
+                    ssp.set(dataset=step.dataset, generation=ds.generation,
+                            rows=ds.num_rows)
+                    vals[step.nid] = TableVal(flat, ds.counts.copy(),
+                                              ds.partitioner,
+                                              device_columns=dev)
+                elif kind == "partition":
+                    ssp.set(elide=step.elide,
+                            path=("elide" if step.elide else
+                                  "device" if step.device_op else "host"))
+                    vals[step.nid] = self._exec_partition(step, g, vals,
+                                                          stats)
+                elif kind == "join":
+                    vals[step.nid] = self._exec_join(
+                        vals[parents[0]], vals[parents[1]], step.projection)
+                elif kind == "aggregate":
+                    vals[step.nid] = self._exec_aggregate(vals[parents[0]],
+                                                          node.params)
+                elif kind == "apply":
+                    vals[step.nid] = self._exec_map(vals[parents[0]],
+                                                    node.params["fn"])
+                elif kind == "flatten":
+                    vals[step.nid] = self._exec_flatten(vals[parents[0]])
+                elif kind == "filter":
+                    vals[step.nid] = self._exec_filter(vals[parents[0]],
+                                                       vals[parents[1]])
+                elif kind == "write":
+                    tv: TableVal = vals[parents[0]]
+                    cols = {k: v for k, v in tv.columns.items()
+                            if k != "__key__"}
+                    self.store.write_layout(step.dataset, cols,
+                                            tv.counts, tv.partitioner,
+                                            device_columns=tv.device_columns)
+                    stats.output_bytes += int(sum(v.nbytes
+                                                  for v in cols.values()))
+                    ssp.set(dataset=step.dataset)
+                    vals[step.nid] = tv
+                else:
+                    # lambda nodes: evaluate over parent values
+                    # (columns/TableVal)
+                    fn = resolve_fn(node.label, node.params)
+                    args = [vals[p].columns if isinstance(vals[p], TableVal)
+                            else vals[p] for p in parents]
+                    vals[step.nid] = fn(*args)
             stats.stage_latency[f"{step.nid}:{node.label}"] = \
                 stats.stage_latency.get(f"{step.nid}:{node.label}", 0.0) + \
                 (time.perf_counter() - t0)

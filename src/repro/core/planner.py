@@ -31,6 +31,7 @@ the flipped dataset.
 from __future__ import annotations
 
 import hashlib
+import itertools
 import threading
 import time
 from collections import OrderedDict
@@ -42,6 +43,8 @@ from .ir import IRGraph, SET_OPS
 from .matching import partitioning_match
 from .partitioner import PartitionerCandidate, merge, search
 from ..data.partition_store import RetiredGenerationError
+from ..obs import metrics as _obs_metrics
+from ..obs.tracer import span as _span
 
 __all__ = ["LogicalPlan", "PhysicalPlan", "PlanKey", "PlanStep", "Planner"]
 
@@ -206,8 +209,11 @@ class Planner:
     jax-level trace counter lives in ``data.device_repartition.
     plan_cache_stats()`` (Session merges both)."""
 
+    _ids = itertools.count(1)        # per-process planner instance label
+
     def __init__(self, store, *, registry: BackendRegistry = None,
-                 matching: bool = True, cache_capacity: int = 128):
+                 matching: bool = True, cache_capacity: int = 128,
+                 metrics: "_obs_metrics.MetricsRegistry" = None):
         if cache_capacity < 1:
             raise ValueError("plan cache capacity must be >= 1")
         self.store = store
@@ -215,13 +221,28 @@ class Planner:
         self.matching = matching
         self.cache_capacity = cache_capacity
         self._cache: "OrderedDict[PlanKey, PhysicalPlan]" = OrderedDict()
-        self._stats = {"hits": 0, "misses": 0, "evictions": 0,
-                       "invalidations": 0}
+        # cache counters live in the MetricsRegistry (labeled per planner
+        # instance so shared-registry sessions don't collide);
+        # cache_stats() is a view over them — same keys/values as the old
+        # private dict, now also exported via metrics()/prometheus_text()
+        self.metrics = metrics or _obs_metrics.REGISTRY
+        labels = {"planner": f"p{next(Planner._ids)}"}
+        self._stats = {
+            name: self.metrics.counter(
+                f"planner_plan_cache_{name}_total",
+                f"PhysicalPlan cache {name}", labels)
+            for name in ("hits", "misses", "evictions", "invalidations")}
+        self.metrics.register_callback(self, Planner._metric_samples)
+        self._metric_labels = labels
         # guards _cache and _stats: the serving tier plans from many
         # threads against one shared planner (DESIGN §11).  Held only
         # around the OrderedDict/counter touches — compiles run outside
         # it, so concurrent different-key compiles proceed in parallel.
         self._lock = threading.RLock()
+
+    def _metric_samples(self):
+        yield ("planner_plan_cache_size", self._metric_labels,
+               len(self._cache))
 
     # ------------------------------------------------------- logical stage --
     def logical(self, workload) -> LogicalPlan:
@@ -267,13 +288,16 @@ class Planner:
         steps disagree with its key; if the pinned generation was retired
         in that window, re-key and retry."""
         for _ in range(4):
-            key = self.plan_key(workload, backend)
-            with self._lock:
-                plan = self._cache.get(key)
-                if plan is not None:
-                    self._cache.move_to_end(key)
-                    self._stats["hits"] += 1
-                    return plan, True
+            with _span("planner.lookup", "planner") as lsp:
+                key = self.plan_key(workload, backend)
+                with self._lock:
+                    plan = self._cache.get(key)
+                    if plan is not None:
+                        self._cache.move_to_end(key)
+                        self._stats["hits"].inc()
+                        lsp.set(hit=True, workload=plan.workload_id)
+                        return plan, True
+                lsp.set(hit=False)
             try:
                 plan = self.compile(self.logical(workload),
                                     self.registry.get(backend), key=key)
@@ -283,11 +307,11 @@ class Planner:
                 # two threads may compile the same key concurrently (the
                 # compile runs unlocked); last-in wins, both plans describe
                 # the identical pinned layout so either is correct
-                self._stats["misses"] += 1
+                self._stats["misses"].inc()
                 self._cache[key] = plan
                 while len(self._cache) > self.cache_capacity:
                     self._cache.popitem(last=False)
-                    self._stats["evictions"] += 1
+                    self._stats["evictions"].inc()
             return plan, False
         raise RuntimeError(
             "store layout kept moving during planning (generations retired "
@@ -306,6 +330,15 @@ class Planner:
         backend = self.registry.get(backend)
         if key is None:
             key = self.plan_key(logical.workload, backend)
+        with _span("planner.compile", "planner",
+                   workload=logical.workload_id,
+                   backend=backend.name) as csp:
+            plan = self._compile_pinned(logical, backend, key)
+            csp.set(elided=len(plan.elided), shuffled=len(plan.shuffled))
+            return plan
+
+    def _compile_pinned(self, logical: LogicalPlan, backend: Backend,
+                        key: PlanKey) -> PhysicalPlan:
         pinned = {name: (self.store.read(name, generation=gen)
                          if gen >= 0 else None)
                   for name, gen, _sig in key.layout}
@@ -381,7 +414,8 @@ class Planner:
     # --------------------------------------------------------- maintenance --
     def cache_stats(self) -> Dict[str, int]:
         with self._lock:
-            return {**self._stats, "size": len(self._cache)}
+            return {**{k: int(c.value) for k, c in self._stats.items()},
+                    "size": len(self._cache)}
 
     def clear_cache(self) -> None:
         with self._lock:
@@ -401,5 +435,6 @@ class Planner:
                 for k in doomed:
                     del self._cache[k]
                 n = len(doomed)
-            self._stats["invalidations"] += n
+            if n:
+                self._stats["invalidations"].inc(n)
             return n

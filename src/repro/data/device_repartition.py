@@ -67,6 +67,7 @@ import numpy as np
 
 from ..kernels.hash_partition.ops import (padded_partition_ids,
                                           partition_ids, scatter_permutation)
+from ..obs.tracer import span as _span
 from .capacity import CapacityMap, bucket_capacity, valid_slot_index
 
 Columns = Dict[str, Any]
@@ -566,27 +567,31 @@ def device_rebucket_full(columns: Columns, key_vals, num_partitions: int, *,
     packs = _build_packs(dev_cols, n, B)
     spec = _pack_spec(packs)
 
-    if mode == "fused":
-        keys_p = jnp.zeros(B, jnp.int32).at[:n].set(as_kernel_keys(key_arr))
-        plan = _fused_rebucket_plan(m, B, spec, interpret, use_kernel)
-        plan.calls += 1
-        order_d, counts_d, outs_d = plan.fn(
-            keys_p, jnp.int32(n), tuple(jnp.asarray(p.data) for p in packs))
-        # one transfer for everything the host needs
-        order_np, counts_np, outs_np = jax.device_get(
-            (order_d, counts_d, outs_d))
-        order_valid = order_np[:n]
-        counts_np = counts_np.astype(np.int64)
-    else:
-        pids_np, counts_np = shuffle_pids(key_arr, m, mode="hostperm")
-        order_valid = host_counting_order(pids_np)
-        order_p = np.concatenate(
-            [order_valid, np.arange(n, B)]).astype(np.int32)
-        plan = _hostperm_rebucket_plan(m, B, spec)
-        plan.calls += 1
-        outs_d = plan.fn(jnp.asarray(order_p),
-                         tuple(jnp.asarray(p.data) for p in packs))
-        outs_np = jax.device_get(outs_d)
+    with _span("shuffle.dispatch", "shuffle", op="rebucket", rows=n, m=m,
+               bucket=B, mode=mode):
+        if mode == "fused":
+            keys_p = jnp.zeros(B, jnp.int32).at[:n].set(
+                as_kernel_keys(key_arr))
+            plan = _fused_rebucket_plan(m, B, spec, interpret, use_kernel)
+            plan.calls += 1
+            order_d, counts_d, outs_d = plan.fn(
+                keys_p, jnp.int32(n),
+                tuple(jnp.asarray(p.data) for p in packs))
+            # one transfer for everything the host needs
+            order_np, counts_np, outs_np = jax.device_get(
+                (order_d, counts_d, outs_d))
+            order_valid = order_np[:n]
+            counts_np = counts_np.astype(np.int64)
+        else:
+            pids_np, counts_np = shuffle_pids(key_arr, m, mode="hostperm")
+            order_valid = host_counting_order(pids_np)
+            order_p = np.concatenate(
+                [order_valid, np.arange(n, B)]).astype(np.int32)
+            plan = _hostperm_rebucket_plan(m, B, spec)
+            plan.calls += 1
+            outs_d = plan.fn(jnp.asarray(order_p),
+                             tuple(jnp.asarray(p.data) for p in packs))
+            outs_np = jax.device_get(outs_d)
 
     out: Columns = {}
     device_out: Columns = {}
@@ -707,38 +712,40 @@ def device_scatter_padded(flat_columns: Columns, pids, counts, *,
     B = shape_bucket(n)
     R = shape_bucket(total)  # output-row bucket: offsets traced, not keyed
 
-    if mode == "fused":
-        packs = _build_packs(dev_cols, n, B)
-        if isinstance(pids, jax.Array):
-            pids_p = jnp.full(B, m, jnp.int32).at[:n].set(
-                pids.astype(jnp.int32))
+    with _span("shuffle.dispatch", "shuffle", op="scatter", rows=n, m=m,
+               bucket=B, mode=mode):
+        if mode == "fused":
+            packs = _build_packs(dev_cols, n, B)
+            if isinstance(pids, jax.Array):
+                pids_p = jnp.full(B, m, jnp.int32).at[:n].set(
+                    pids.astype(jnp.int32))
+            else:
+                buf = np.full(B, m, np.int32)
+                buf[:n] = np.asarray(pids).astype(np.int32)
+                pids_p = jnp.asarray(buf)
+            plan = _fused_scatter_plan(m, B, R, _pack_spec(packs), interpret,
+                                       use_kernel)
+            plan.calls += 1
+            flat_dest_d, outs = plan.fn(
+                pids_p, jnp.asarray(counts_np.astype(np.int32)),
+                jnp.int32(n), jnp.asarray(offsets_np.astype(np.int32)),
+                tuple(jnp.asarray(p.data) for p in packs))
+            flat_dest_np = None
+            if host_cols:
+                flat_dest_np = np.asarray(flat_dest_d)[:n]
         else:
-            buf = np.full(B, m, np.int32)
-            buf[:n] = np.asarray(pids).astype(np.int32)
-            pids_p = jnp.asarray(buf)
-        plan = _fused_scatter_plan(m, B, R, _pack_spec(packs), interpret,
-                                   use_kernel)
-        plan.calls += 1
-        flat_dest_d, outs = plan.fn(
-            pids_p, jnp.asarray(counts_np.astype(np.int32)), jnp.int32(n),
-            jnp.asarray(offsets_np.astype(np.int32)),
-            tuple(jnp.asarray(p.data) for p in packs))
-        flat_dest_np = None
-        if host_cols:
-            flat_dest_np = np.asarray(flat_dest_d)[:n]
-    else:
-        # rows [n:B] of each pack are zeros; row B is the explicit trash
-        # source every empty (worker, slot) cell gathers from
-        packs = _build_packs(dev_cols, n, B + 1)
-        pids_np = np.asarray(pids).astype(np.int64)
-        flat_dest_np = host_counting_sort_dest(pids_np, counts_np, cap,
-                                               dest_offsets=offsets_np)
-        inv = np.full(R, B, np.int32)
-        inv[flat_dest_np] = np.arange(n, dtype=np.int32)
-        plan = _hostperm_scatter_plan(m, B, R, _pack_spec(packs))
-        plan.calls += 1
-        outs = plan.fn(jnp.asarray(inv),
-                       tuple(jnp.asarray(p.data) for p in packs))
+            # rows [n:B] of each pack are zeros; row B is the explicit trash
+            # source every empty (worker, slot) cell gathers from
+            packs = _build_packs(dev_cols, n, B + 1)
+            pids_np = np.asarray(pids).astype(np.int64)
+            flat_dest_np = host_counting_sort_dest(pids_np, counts_np, cap,
+                                                   dest_offsets=offsets_np)
+            inv = np.full(R, B, np.int32)
+            inv[flat_dest_np] = np.arange(n, dtype=np.int32)
+            plan = _hostperm_scatter_plan(m, B, R, _pack_spec(packs))
+            plan.calls += 1
+            outs = plan.fn(jnp.asarray(inv),
+                           tuple(jnp.asarray(p.data) for p in packs))
 
     columns: Columns = {}
     for p, mat in zip(packs, outs):

@@ -41,6 +41,7 @@ import numpy as np
 
 from ..core.partitioner import (HASH, PartitionerCandidate, RANDOM,
                                 ROUND_ROBIN)
+from ..obs.tracer import span as _span
 from .capacity import CapacityMap, plan_capacity_map, valid_slot_index
 from .device_repartition import (device_repartition_dataset,
                                  device_scatter_padded, dtype_roundtrips,
@@ -336,6 +337,30 @@ class PartitionStore:
         with self._log_lock:
             return dict(self.write_totals)
 
+    def register_metrics(self, registry) -> None:
+        """Expose this store's cumulative stats through a
+        :class:`~repro.obs.metrics.MetricsRegistry` (idempotent per
+        registry).  The internal representations stay authoritative —
+        ``write_totals`` folds evicted log rows, ``io_snapshot`` lives in
+        the durable tier — so they are contributed as snapshot-time
+        callbacks rather than migrated to registry counters."""
+        marker = id(registry)
+        regs = getattr(self, "_metric_registries", None)
+        if regs is None:
+            regs = self._metric_registries = set()
+        if marker in regs:
+            return
+        regs.add(marker)
+        registry.register_callback(self, PartitionStore._metric_samples)
+
+    def _metric_samples(self):
+        for k, v in self.write_stats().items():
+            yield f"store_write_{k}", {}, float(v)
+        for k, v in self.io_snapshot().items():
+            yield f"store_io_{k}", {}, float(v)
+        yield "store_datasets", {}, float(len(self.datasets))
+        yield "store_resident_bytes", {}, float(self.resident_bytes())
+
     # -- test-only race instrumentation (DESIGN §11) -------------------------
     def set_sync_point(self, point: str,
                        fn: Optional[Callable[[], None]]) -> None:
@@ -370,26 +395,28 @@ class PartitionStore:
         persist runs under a per-NAME lock only (it serializes the
         generation sequence of this dataset), so a slow background
         repartition of one dataset never blocks writers of another."""
-        with self._name_lock(name):
-            prev = self.datasets.get(name)
-            if prev is not None:
-                ds.generation = prev.generation + 1
-            if self.durable is not None:
-                if self.autoflush:
-                    self.durable.persist(ds)
-                    self._dirty.discard(name)
-                else:
-                    self._dirty.add(name)
-            self._sync("install:pre_flip")
-            with self._swap_lock:
+        with _span("store.install", "store", dataset=name) as sp:
+            with self._name_lock(name):
+                prev = self.datasets.get(name)
                 if prev is not None:
-                    retired = self._retired.setdefault(name, [])
-                    retired.append(prev)
-                    if len(retired) > self.max_retired_generations:
-                        del retired[:len(retired)
-                                    - self.max_retired_generations]
-                self.datasets[name] = ds
-            self._sync("install:post_flip")
+                    ds.generation = prev.generation + 1
+                if self.durable is not None:
+                    if self.autoflush:
+                        self.durable.persist(ds)
+                        self._dirty.discard(name)
+                    else:
+                        self._dirty.add(name)
+                self._sync("install:pre_flip")
+                with self._swap_lock:
+                    if prev is not None:
+                        retired = self._retired.setdefault(name, [])
+                        retired.append(prev)
+                        if len(retired) > self.max_retired_generations:
+                            del retired[:len(retired)
+                                        - self.max_retired_generations]
+                    self.datasets[name] = ds
+                self._sync("install:post_flip")
+            sp.set(generation=ds.generation)
         self._touch(name)
         self._maybe_evict()
         return ds
@@ -469,15 +496,18 @@ class PartitionStore:
         # the per-name lock serializes spill against a concurrent _install
         # of the same dataset (the generation sequence stays linear); other
         # datasets' writers are unaffected
-        with self._name_lock(name):
-            ds = self.datasets[name]
-            if ds.spilled:
-                return True
-            self.flush(name)
-            man = self.durable.load_manifest(name, ds.generation)
-            if man is None:              # validation failed — keep resident
-                return False
-            return self._swap_to_segments(ds, man)
+        with _span("store.spill", "store", dataset=name) as sp:
+            with self._name_lock(name):
+                ds = self.datasets[name]
+                if ds.spilled:
+                    return True
+                self.flush(name)
+                man = self.durable.load_manifest(name, ds.generation)
+                if man is None:          # validation failed — keep resident
+                    sp.set(ok=False)
+                    return False
+                sp.set(generation=ds.generation)
+                return self._swap_to_segments(ds, man)
 
     def _swap_to_segments(self, ds: StoredDataset, man) -> bool:
         """Replace ``ds``'s column containers with memmap views of their
@@ -521,29 +551,32 @@ class PartitionStore:
         """Promote a spilled dataset back to residency: in-RAM copies on a
         host store, device arrays (host→device prefetch) on a
         device-resident one.  Returns True when the dataset is resident."""
-        with self._name_lock(name):
-            ds = self.datasets[name]
-            if not ds.spilled:
-                return True
-            t0 = time.perf_counter()
-            loaded = 0
-            promoted: Columns = {}
-            for k, v in list(ds.columns.items()):
-                arr = np.array(v)        # one sequential segment read
-                loaded += int(arr.nbytes)
-                if self._storage_prefetch:
-                    promoted[k] = jax.numpy.asarray(arr) \
-                        if dtype_roundtrips(arr.dtype) else arr
-                else:
-                    promoted[k] = arr
-            self._sync("prefetch:pre_swap")
-            with self._swap_lock:
-                for k in list(ds.columns):
-                    ds.columns[k] = promoted[k]
-            if self.durable is not None:
-                self.durable.io_add(bytes_read=loaded,
-                                    read_s=time.perf_counter() - t0,
-                                    rehydrations=1, rehydrated_bytes=loaded)
+        with _span("store.prefetch", "store", dataset=name) as psp:
+            with self._name_lock(name):
+                ds = self.datasets[name]
+                if not ds.spilled:
+                    return True
+                t0 = time.perf_counter()
+                loaded = 0
+                promoted: Columns = {}
+                for k, v in list(ds.columns.items()):
+                    arr = np.array(v)    # one sequential segment read
+                    loaded += int(arr.nbytes)
+                    if self._storage_prefetch:
+                        promoted[k] = jax.numpy.asarray(arr) \
+                            if dtype_roundtrips(arr.dtype) else arr
+                    else:
+                        promoted[k] = arr
+                self._sync("prefetch:pre_swap")
+                with self._swap_lock:
+                    for k in list(ds.columns):
+                        ds.columns[k] = promoted[k]
+                if self.durable is not None:
+                    self.durable.io_add(bytes_read=loaded,
+                                        read_s=time.perf_counter() - t0,
+                                        rehydrations=1,
+                                        rehydrated_bytes=loaded)
+                psp.set(bytes=loaded)
         self._touch(name)
         self._maybe_evict(exclude=name)
         return True
@@ -593,12 +626,14 @@ class PartitionStore:
         if partitioner is None:
             partitioner = PartitionerCandidate(graph=None, strategy=ROUND_ROBIN)
 
-        if self._device_resident:
-            columns, counts, cmap = self._dispatch_device(
-                data, partitioner, n, seed)
-        else:
-            columns, counts, cmap = self._dispatch_host(
-                data, partitioner, n, seed)
+        with _span("store.write", "store", dataset=name, rows=n,
+                   strategy=partitioner.strategy):
+            if self._device_resident:
+                columns, counts, cmap = self._dispatch_device(
+                    data, partitioner, n, seed)
+            else:
+                columns, counts, cmap = self._dispatch_host(
+                    data, partitioner, n, seed)
 
         nbytes = int(sum(np.asarray(v).nbytes for v in data.values()))
         ds = StoredDataset(name=name, columns=columns,
@@ -750,19 +785,23 @@ class PartitionStore:
         ``(new ds, 0 bytes moved)``.  A no-op (current ds, 0) when the
         planned layout equals the current one."""
         t0 = time.perf_counter()
-        ds = self.read(name)
-        counts = np.asarray(ds.counts, np.int64)
-        cmap = plan_capacity_map(counts, threshold=self.capacity_threshold)
-        if cmap == ds.capacity_map:
-            return ds, 0
-        flat = flatten_dataset(ds)
-        new = StoredDataset(name=name,
-                            columns=self._materialize_layout(
-                                flat, counts, cmap),
-                            counts=counts, partitioner=ds.partitioner,
-                            num_rows=ds.num_rows, nbytes=ds.nbytes,
-                            capacity_map=cmap)
-        self._install(name, new)
+        with _span("store.rebucket", "store", dataset=name) as sp:
+            ds = self.read(name)
+            counts = np.asarray(ds.counts, np.int64)
+            cmap = plan_capacity_map(counts,
+                                     threshold=self.capacity_threshold)
+            if cmap == ds.capacity_map:
+                sp.set(noop=True)
+                return ds, 0
+            flat = flatten_dataset(ds)
+            new = StoredDataset(name=name,
+                                columns=self._materialize_layout(
+                                    flat, counts, cmap),
+                                counts=counts, partitioner=ds.partitioner,
+                                num_rows=ds.num_rows, nbytes=ds.nbytes,
+                                capacity_map=cmap)
+            self._install(name, new)
+            sp.set(generation=new.generation, bucketed=cmap is not None)
         self._log_write({
             "name": name, "rows": new.num_rows, "bytes": new.nbytes,
             "strategy": ds.partitioner.strategy if ds.partitioner else None,
@@ -845,12 +884,20 @@ class PartitionStore:
         t0 = time.perf_counter()
         moved = int(ds.nbytes * (self.m - 1) / self.m)
         name = name or (ds.name if swap else ds.name + "@reparted")
+        with _span("store.repartition", "store", dataset=name,
+                   bytes_moved=moved, swap=swap) as rsp:
+            return self._repartition(ds, partitioner, name, mesh, swap,
+                                     moved, t0, rsp)
+
+    def _repartition(self, ds, partitioner, name, mesh, swap, moved, t0,
+                     rsp) -> Tuple[StoredDataset, int]:
         if mesh is not None:
             from ..core.sharding_bridge import device_put_dataset
         if (self._device_resident and ds.backend == "device"
                 and partitioner.strategy == HASH
                 and partitioner.graph is not None
                 and getattr(partitioner, "kernel_dispatchable", True)):
+            rsp.set(path="d2d")
             columns, counts, cmap = device_repartition_dataset(
                 ds, partitioner, self.m, interpret=self.interpret,
                 plan_capacity=self._plan_cmap)
@@ -872,6 +919,7 @@ class PartitionStore:
                 "generation": new.generation,
             })
         else:
+            rsp.set(path="host")
             flat = ds.gather()
             new = self.write(name, flat, partitioner)
             if mesh is not None:

@@ -29,21 +29,28 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from typing import Any, Dict, List, Optional
 from urllib.parse import quote, unquote
 
 import numpy as np
 
+from ...obs.tracer import span as _span
 from .manifest import (Manifest, atomic_write_text, decode_partitioner,
                        gen_dirname, list_generations, load_current,
                        load_manifest, manifest_filename, publish_manifest,
                        segment_filename)
 from .segments import fsync_dir, open_segment, write_segment
 
-__all__ = ["DurableStore", "CATALOG_FORMAT"]
+__all__ = ["DurableStore", "CATALOG_FORMAT", "DECISIONS_SCHEMA_VERSION"]
 
 CATALOG_FORMAT = 1
 _GENERATION_LOG_CAP = 64     # manifest generation-log entries retained
+
+#: schema version stamped into decisions.log JSONL rows.  v1 = the
+#: pre-versioning applied-decision rows (no ``version`` field); v2 adds
+#: the field itself plus the Autopilot's kind="why" explainability rows.
+DECISIONS_SCHEMA_VERSION = 2
 
 
 def _encode_name(name: str) -> str:
@@ -139,30 +146,33 @@ class DurableStore:
         (superseded) generation for spill, which must never move the
         store's visible head backwards."""
         t0 = time.perf_counter()
-        ds_dir = self.dataset_dir(ds.name, create=True)
-        gdir = os.path.join(ds_dir, gen_dirname(ds.generation))
-        os.makedirs(gdir, exist_ok=True)
-        written = 0
-        for k, v in ds.columns.items():
-            written += write_segment(os.path.join(gdir, segment_filename(k)),
-                                     np.asarray(v))
-            self.io_add(segments_written=1)
-        fsync_dir(gdir)
-        prev = load_manifest(ds_dir, ds.generation - 1) \
-            if ds.generation > 0 else None
-        man = Manifest.of_dataset(ds, prev)
-        man.generation_log = man.generation_log[-_GENERATION_LOG_CAP:]
-        if publish_current:
-            publish_manifest(ds_dir, man)
-            self._gc(ds_dir, ds.generation)
-        else:
-            atomic_write_text(
-                os.path.join(ds_dir, manifest_filename(man.generation)),
-                man.to_json())
-        self.io_add(bytes_written=written,
-                    write_s=time.perf_counter() - t0,
-                    generations_published=1)
-        return man
+        with _span("durable.persist", "storage", dataset=ds.name,
+                   generation=ds.generation) as sp:
+            ds_dir = self.dataset_dir(ds.name, create=True)
+            gdir = os.path.join(ds_dir, gen_dirname(ds.generation))
+            os.makedirs(gdir, exist_ok=True)
+            written = 0
+            for k, v in ds.columns.items():
+                written += write_segment(
+                    os.path.join(gdir, segment_filename(k)), np.asarray(v))
+                self.io_add(segments_written=1)
+            fsync_dir(gdir)
+            prev = load_manifest(ds_dir, ds.generation - 1) \
+                if ds.generation > 0 else None
+            man = Manifest.of_dataset(ds, prev)
+            man.generation_log = man.generation_log[-_GENERATION_LOG_CAP:]
+            if publish_current:
+                publish_manifest(ds_dir, man)
+                self._gc(ds_dir, ds.generation)
+            else:
+                atomic_write_text(
+                    os.path.join(ds_dir, manifest_filename(man.generation)),
+                    man.to_json())
+            self.io_add(bytes_written=written,
+                        write_s=time.perf_counter() - t0,
+                        generations_published=1)
+            sp.set(bytes=written)
+            return man
 
     def _gc(self, ds_dir: str, current_gen: int) -> None:
         """Drop manifests + segment dirs older than the retention window."""
@@ -232,14 +242,27 @@ class DurableStore:
         return os.path.join(self.root, "decisions.log")
 
     def log_decision(self, record: Dict[str, Any]) -> None:
-        """Append one applied-decision record (single-write JSONL line)."""
+        """Append one decision record (single-write JSONL line).
+
+        Rows are stamped with the writer's schema version
+        (:data:`DECISIONS_SCHEMA_VERSION`) unless the caller set one;
+        :meth:`decisions` treats missing versions as v1 (pre-versioning
+        writers) and skips-but-reports rows from a future version."""
+        record = dict(record)
+        record.setdefault("version", DECISIONS_SCHEMA_VERSION)
         with open(self.decisions_path, "a") as f:
             f.write(json.dumps(record, sort_keys=True) + "\n")
             f.flush()
             os.fsync(f.fileno())
 
     def decisions(self) -> List[Dict[str, Any]]:
+        """Parsed decisions.log rows this reader understands (versions ≤
+        :data:`DECISIONS_SCHEMA_VERSION`; missing version ⇒ v1).  Rows
+        from a future schema are skipped, counted in
+        ``self.skipped_decisions`` and warned about once per load — a
+        downgraded reader degrades instead of crashing."""
         out: List[Dict[str, Any]] = []
+        skipped = 0
         try:
             with open(self.decisions_path) as f:
                 for line in f:
@@ -247,9 +270,24 @@ class DurableStore:
                     if not line:
                         continue
                     try:
-                        out.append(json.loads(line))
+                        rec = json.loads(line)
                     except ValueError:
                         continue        # torn final line after a crash
+                    try:
+                        v = int(rec.get("version", 1))
+                    except (TypeError, ValueError):
+                        v = DECISIONS_SCHEMA_VERSION + 1   # unparseable
+                    if v > DECISIONS_SCHEMA_VERSION:
+                        skipped += 1
+                        continue
+                    out.append(rec)
         except OSError:
             pass
+        self.skipped_decisions = skipped
+        if skipped:
+            warnings.warn(
+                f"decisions.log: skipped {skipped} row(s) with schema "
+                f"version > {DECISIONS_SCHEMA_VERSION} (written by a newer "
+                "build); readable rows were loaded", RuntimeWarning,
+                stacklevel=2)
         return out

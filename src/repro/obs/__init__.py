@@ -1,0 +1,25 @@
+"""Unified observability layer: span tracing, metrics, exporters.
+
+See DESIGN.md §13.  Three pieces:
+
+* :mod:`repro.obs.tracer` — low-overhead span tracer (off by default);
+* :mod:`repro.obs.metrics` — one :class:`MetricsRegistry` for counters,
+  gauges and fixed-bucket histograms, JSON + Prometheus exporters;
+* :mod:`repro.obs.export` — Chrome ``trace_event`` JSON (Perfetto).
+"""
+
+from .tracer import (TRACER, Span, TraceContext, Tracer, clear_spans,
+                     configure, disable, enable, finished_spans, span,
+                     tracing_mode)
+from .metrics import (DEFAULT_BUCKETS, METRICS_SCHEMA_VERSION, REGISTRY,
+                      Counter, Gauge, Histogram, MetricsRegistry,
+                      validate_snapshot)
+from .export import chrome_trace_json, to_chrome_trace, write_chrome_trace
+
+__all__ = [
+    "TRACER", "Span", "TraceContext", "Tracer", "span", "configure",
+    "enable", "disable", "tracing_mode", "finished_spans", "clear_spans",
+    "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "METRICS_SCHEMA_VERSION", "DEFAULT_BUCKETS", "validate_snapshot",
+    "to_chrome_trace", "chrome_trace_json", "write_chrome_trace",
+]

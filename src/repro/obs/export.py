@@ -1,0 +1,119 @@
+"""Exporters: spans → Chrome ``trace_event`` JSON (Perfetto-loadable).
+
+The Chrome trace-event format (the `catapult` JSON spec) is the lingua
+franca of timeline viewers: ``chrome://tracing``, Perfetto's web UI and
+``speedscope`` all open it directly.  We emit:
+
+* one ``M`` (metadata) event per thread naming it (``thread_name``), so
+  the serving pool workers and the Autopilot's optimizer thread show up
+  labeled instead of as bare ids;
+* one ``X`` (complete) event per finished span — ``ts``/``dur`` in
+  microseconds off the tracer's shared ``perf_counter`` clock, ``args``
+  carrying the span annotations plus our span/parent ids;
+* an ``s``/``f`` (flow start/finish) pair for every cross-thread handoff
+  a span recorded via ``tracer.attach`` — Perfetto draws these as arrows
+  from the submitting span to the worker span, which is how a serve's
+  ticket execution and the Autopilot's ticks visually attach to their
+  origin.
+
+Timestamps are rebased so the earliest span starts at t=0: perf_counter
+has an arbitrary epoch and viewers dislike 6-digit-second offsets.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, List, Optional
+
+from .tracer import Span, TRACER
+
+__all__ = ["to_chrome_trace", "write_chrome_trace", "chrome_trace_json"]
+
+#: process id stamped on every event — single-process system, constant
+_PID = 1
+
+
+def to_chrome_trace(spans: Optional[Iterable[Span]] = None,
+                    metadata: Optional[Dict[str, Any]] = None
+                    ) -> Dict[str, Any]:
+    """Convert finished spans (default: the global tracer's buffer) into
+    a Chrome trace-event document (the ``traceEvents`` object form)."""
+    if spans is None:
+        spans = TRACER.finished()
+    spans = [sp for sp in spans if sp.t1 is not None]
+    events: List[Dict[str, Any]] = []
+
+    t_base = min((sp.t0 for sp in spans), default=0.0)
+
+    def us(t: float) -> float:
+        return round((t - t_base) * 1e6, 3)
+
+    threads: Dict[int, str] = {}
+    for sp in spans:
+        threads.setdefault(sp.tid, sp.thread_name)
+        if sp.flow_from is not None:
+            threads.setdefault(sp.flow_from.tid, sp.flow_from.thread_name)
+
+    for tid, name in sorted(threads.items()):
+        events.append({"ph": "M", "name": "thread_name", "pid": _PID,
+                       "tid": tid, "args": {"name": name}})
+
+    flow_n = 0
+    for sp in sorted(spans, key=lambda s: s.t0):
+        args = {str(k): _jsonable(v) for k, v in sp.args.items()}
+        args["span_id"] = sp.span_id
+        if sp.parent_id is not None:
+            args["parent_id"] = sp.parent_id
+        args["trace_id"] = sp.trace_id
+        events.append({"ph": "X", "name": sp.name, "cat": sp.cat or "span",
+                       "pid": _PID, "tid": sp.tid,
+                       "ts": us(sp.t0), "dur": round(sp.dur_s * 1e6, 3),
+                       "args": args})
+        if sp.flow_from is not None:
+            # arrow: from the capture point on the submitting thread to
+            # this span's start on the worker thread
+            flow_n += 1
+            ctx = sp.flow_from
+            events.append({"ph": "s", "id": flow_n, "name": "handoff",
+                           "cat": "flow", "pid": _PID, "tid": ctx.tid,
+                           "ts": us(min(ctx.captured_at, sp.t0))})
+            events.append({"ph": "f", "id": flow_n, "name": "handoff",
+                           "cat": "flow", "pid": _PID, "tid": sp.tid,
+                           "ts": us(sp.t0), "bp": "e"})
+
+    doc: Dict[str, Any] = {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {"exporter": "repro.obs", "spans": len(spans),
+                      "dropped": TRACER.dropped},
+    }
+    if metadata:
+        doc["otherData"].update({str(k): _jsonable(v)
+                                 for k, v in metadata.items()})
+    return doc
+
+
+def chrome_trace_json(spans: Optional[Iterable[Span]] = None,
+                      metadata: Optional[Dict[str, Any]] = None) -> str:
+    return json.dumps(to_chrome_trace(spans, metadata))
+
+
+def write_chrome_trace(path: str,
+                       spans: Optional[Iterable[Span]] = None,
+                       metadata: Optional[Dict[str, Any]] = None
+                       ) -> Dict[str, Any]:
+    """Write a Perfetto-loadable trace file; returns the document."""
+    doc = to_chrome_trace(spans, metadata)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return doc
+
+
+def _jsonable(v: Any) -> Any:
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    return repr(v)

@@ -1,0 +1,331 @@
+"""MetricsRegistry — the one place runtime counters live (DESIGN §13).
+
+Before this layer, every subsystem kept its own ad-hoc stats dict
+(planner ``cache_stats()``, store ``write_stats()``/``io_stats``, serving
+``stats()``, the device ShufflePlan trace counter).  They still exist as
+*views*, but the storage — or, for stats whose internal representation is
+load-bearing (the store's fold-on-eviction write log), a snapshot
+callback — is consolidated here so one call exports everything:
+
+* :meth:`MetricsRegistry.snapshot` — versioned JSON document
+  (``{"version": 1, "metrics": {...}}``), the machine-readable surface
+  ``session.metrics()``/``frontend.metrics()`` return.
+* :meth:`MetricsRegistry.prometheus_text` — Prometheus text exposition
+  (``# TYPE``/``# HELP`` + samples), scrape-ready.
+
+Instruments are **counters** (monotone), **gauges** (set/add) and
+**fixed-bucket histograms** (cumulative ``le`` buckets + sum + count).
+All are thread-safe with one tiny per-instrument lock held only around
+the numeric update — no global lock on any hot path.  Same
+``(name, labels)`` always resolves to the same instrument, so components
+re-created per session (planners, frontends) attribute their series with
+an instance label instead of colliding.
+
+Callbacks (:meth:`register_callback`) contribute computed samples at
+snapshot time; registrants are held by weakref so short-lived owners
+(a test's Session) never pin or pollute the registry after death.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+import weakref
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+           "METRICS_SCHEMA_VERSION", "validate_snapshot",
+           "DEFAULT_BUCKETS"]
+
+#: schema version stamped into every JSON snapshot; loaders must tolerate
+#: (skip + report) documents from a future version
+METRICS_SCHEMA_VERSION = 1
+
+#: latency-ish default buckets (seconds): 100µs … 10s, log-spaced
+DEFAULT_BUCKETS = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0, 3.0,
+                   10.0)
+
+Labels = Tuple[Tuple[str, str], ...]
+
+
+def _labels_key(labels: Optional[Dict[str, str]]) -> Labels:
+    if not labels:
+        return ()
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class _Instrument:
+    """Common shell: identity + its own cheap lock."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, labels: Labels, help: str = ""):
+        self.name = name
+        self.labels = labels
+        self.help = help
+        self._lock = threading.Lock()
+
+    @property
+    def label_dict(self) -> Dict[str, str]:
+        return dict(self.labels)
+
+
+class Counter(_Instrument):
+    """Monotone counter.  ``inc()`` only; decrements raise."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, labels: Labels, help: str = ""):
+        super().__init__(name, labels, help)
+        self._value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        if v < 0:
+            raise ValueError(f"counter {self.name} cannot decrease (v={v})")
+        with self._lock:
+            self._value += v
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def samples(self) -> Iterable[Tuple[str, Labels, float]]:
+        yield self.name, self.labels, self.value
+
+
+class Gauge(_Instrument):
+    """Point-in-time value: ``set()`` / ``add()`` (either direction)."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, labels: Labels, help: str = ""):
+        super().__init__(name, labels, help)
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    def add(self, v: float) -> None:
+        with self._lock:
+            self._value += v
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def samples(self) -> Iterable[Tuple[str, Labels, float]]:
+        yield self.name, self.labels, self.value
+
+
+class Histogram(_Instrument):
+    """Fixed-bucket histogram (Prometheus classic shape): per-bucket
+    cumulative counts over static upper bounds, plus sum and count."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, labels: Labels, help: str = "",
+                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
+        super().__init__(name, labels, help)
+        bs = tuple(sorted(float(b) for b in buckets))
+        if not bs:
+            raise ValueError("histogram needs at least one bucket bound")
+        self.buckets = bs
+        self._counts = [0] * (len(bs) + 1)       # +inf tail bucket
+        self._sum = 0.0
+        self._count = 0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        # linear scan: bucket lists are short (~12) and the loop is inside
+        # the per-instrument lock for exact concurrent totals
+        with self._lock:
+            for i, b in enumerate(self.buckets):
+                if v <= b:
+                    self._counts[i] += 1
+                    break
+            else:
+                self._counts[-1] += 1
+            self._sum += v
+            self._count += 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            counts = list(self._counts)
+            s, c = self._sum, self._count
+        cum, out = 0, []
+        for b, n in zip(self.buckets, counts[:-1]):
+            cum += n
+            out.append((b, cum))
+        return {"buckets": out, "inf": c, "sum": s, "count": c}
+
+    def samples(self) -> Iterable[Tuple[str, Labels, float]]:
+        snap = self.snapshot()
+        for b, cum in snap["buckets"]:
+            yield (self.name + "_bucket",
+                   self.labels + (("le", _fmt_float(b)),), float(cum))
+        yield (self.name + "_bucket", self.labels + (("le", "+Inf"),),
+               float(snap["inf"]))
+        yield self.name + "_sum", self.labels, float(snap["sum"])
+        yield self.name + "_count", self.labels, float(snap["count"])
+
+
+def _fmt_float(v: float) -> str:
+    return repr(int(v)) if float(v).is_integer() else repr(float(v))
+
+
+class MetricsRegistry:
+    """Get-or-create instrument registry + exporters."""
+
+    def __init__(self):
+        self._instruments: Dict[Tuple[str, Labels], _Instrument] = {}
+        self._lock = threading.Lock()            # registration only
+        # weakref'd (owner, fn) callbacks: fn(owner) -> iterable of
+        # (name, labels-dict, value) computed samples
+        self._callbacks: List[Tuple[weakref.ref, Callable]] = []
+
+    # -- registration --------------------------------------------------------
+    def _get(self, cls, name: str, labels: Optional[Dict[str, str]],
+             help: str, **kw) -> _Instrument:
+        key = (name, _labels_key(labels))
+        with self._lock:
+            inst = self._instruments.get(key)
+            if inst is None:
+                inst = cls(name, key[1], help=help, **kw)
+                self._instruments[key] = inst
+            elif not isinstance(inst, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as {inst.kind}")
+            return inst
+
+    def counter(self, name: str, help: str = "",
+                labels: Optional[Dict[str, str]] = None) -> Counter:
+        return self._get(Counter, name, labels, help)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Optional[Dict[str, str]] = None) -> Gauge:
+        return self._get(Gauge, name, labels, help)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Optional[Dict[str, str]] = None,
+                  buckets: Tuple[float, ...] = DEFAULT_BUCKETS) -> Histogram:
+        return self._get(Histogram, name, labels, help, buckets=buckets)
+
+    def register_callback(self, owner: Any, fn: Callable) -> None:
+        """Contribute computed samples at snapshot time: ``fn(owner)``
+        yields ``(name, labels_dict, value)``.  ``owner`` is weakly held —
+        when it dies the callback silently disappears."""
+        with self._lock:
+            self._callbacks.append((weakref.ref(owner), fn))
+
+    # -- collection ----------------------------------------------------------
+    def _collect(self) -> List[Tuple[str, Labels, float, str, str]]:
+        """All samples: (name, labels, value, kind, help)."""
+        with self._lock:
+            instruments = list(self._instruments.values())
+            callbacks = list(self._callbacks)
+        out = []
+        for inst in instruments:
+            for name, labels, value in inst.samples():
+                out.append((name, labels, value, inst.kind, inst.help))
+        dead = False
+        for ref, fn in callbacks:
+            owner = ref()
+            if owner is None:
+                dead = True
+                continue
+            try:
+                for name, labels, value in fn(owner):
+                    out.append((name, _labels_key(labels), float(value),
+                                "gauge", ""))
+            except Exception:       # noqa: BLE001 — a broken callback must
+                continue            # never take down a metrics scrape
+        if dead:
+            with self._lock:
+                self._callbacks = [(r, f) for r, f in self._callbacks
+                                   if r() is not None]
+        return out
+
+    # -- exporters -----------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Versioned JSON document of every sample (the
+        ``session.metrics()`` payload)."""
+        metrics: Dict[str, Any] = {}
+        for name, labels, value, kind, _help in sorted(self._collect()):
+            series = metrics.setdefault(name, {"type": kind, "samples": []})
+            series["samples"].append({"labels": dict(labels),
+                                      "value": value})
+        return {"version": METRICS_SCHEMA_VERSION,
+                "generated_unix_s": time.time(),
+                "metrics": metrics}
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition format, one block per metric name."""
+        by_name: Dict[str, List] = {}
+        meta: Dict[str, Tuple[str, str]] = {}
+        for name, labels, value, kind, help in self._collect():
+            base = name
+            for suffix in ("_bucket", "_sum", "_count"):
+                if kind == "histogram" and name.endswith(suffix):
+                    base = name[:-len(suffix)]
+                    break
+            by_name.setdefault(base, []).append((name, labels, value))
+            meta.setdefault(base, (kind, help))
+        lines: List[str] = []
+        for base in sorted(by_name):
+            kind, help = meta[base]
+            if help:
+                lines.append(f"# HELP {base} {help}")
+            lines.append(f"# TYPE {base} {kind}")
+            # keep each instrument's native sample order — histogram
+            # buckets must stay le-ascending with +Inf last, which a
+            # lexicographic sort would scramble
+            for name, labels, value in by_name[base]:
+                if labels:
+                    lab = ",".join(f'{k}="{_escape(v)}"' for k, v in labels)
+                    lines.append(f"{name}{{{lab}}} {_fmt_value(value)}")
+                else:
+                    lines.append(f"{name} {_fmt_value(value)}")
+        return "\n".join(lines) + "\n"
+
+    def write_snapshot(self, path: str) -> Dict[str, Any]:
+        snap = self.snapshot()
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        return snap
+
+    # -- maintenance ---------------------------------------------------------
+    def reset(self) -> None:
+        """Drop every instrument and callback (tests)."""
+        with self._lock:
+            self._instruments.clear()
+            self._callbacks.clear()
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt_value(v: float) -> str:
+    return repr(int(v)) if float(v).is_integer() else repr(float(v))
+
+
+def validate_snapshot(snap: Dict[str, Any]) -> Tuple[bool, str]:
+    """Loader-side schema check for a metrics JSON snapshot: known
+    versions pass; an unknown (newer) version is *reported*, not fatal —
+    callers decide whether to best-effort parse."""
+    v = snap.get("version")
+    if v is None:
+        return False, "snapshot has no 'version' field"
+    if int(v) > METRICS_SCHEMA_VERSION:
+        return False, (f"snapshot version {v} is newer than supported "
+                       f"{METRICS_SCHEMA_VERSION}; fields may be missing")
+    return True, ""
+
+
+#: the process-global default registry (Sessions/Frontends use it unless
+#: constructed with their own)
+REGISTRY = MetricsRegistry()

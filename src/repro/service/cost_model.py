@@ -87,6 +87,27 @@ class LayoutScore:
     def net_s(self) -> float:
         return self.benefit_s + self.padding_benefit_s - self.apply_cost_s
 
+    def explain(self, hysteresis: float, horizon: float = 1.0) -> Dict:
+        """The gate math as data — every priced component plus both sides
+        of the :meth:`worth_it` inequality, so a why-record can show
+        exactly how close a rejected candidate came."""
+        amortized = (self.benefit_s + self.padding_benefit_s) * horizon
+        gated = hysteresis * self.apply_cost_s
+        return {
+            "benefit_s": float(self.benefit_s),
+            "padding_benefit_s": float(self.padding_benefit_s),
+            "repartition_s": float(self.repartition_s),
+            "io_s": float(self.io_s),
+            "apply_cost_s": float(self.apply_cost_s),
+            "net_s": float(self.net_s),
+            "runs_in_window": float(self.runs_in_window),
+            "shuffles_delta": float(self.shuffles_delta),
+            "hysteresis": float(hysteresis),
+            "horizon_windows": float(horizon),
+            "amortized_benefit_s": float(amortized),
+            "gated_cost_s": float(gated),
+        }
+
     def worth_it(self, hysteresis: float, horizon: float = 1.0) -> bool:
         """Modeled benefit must clear the one-time apply cost (repartition
         shuffle + any durable-tier I/O) by the hysteresis factor — the

@@ -89,8 +89,8 @@ class Observer:
                 workload, timestamp=self.clock(), latency=stats.wall_s,
                 input_bytes=float(stats.input_bytes),
                 output_bytes=float(stats.output_bytes),
-                padded_bytes=float(getattr(stats, "padded_bytes", 0)),
-                valid_bytes=float(getattr(stats, "valid_bytes", 0)),
+                padded_bytes=float(stats.padded_bytes),
+                valid_bytes=float(stats.valid_bytes),
                 candidate_stats=dict(stats.candidate_stats or {}))
         self.records_seen += 1
         if self.cost_model is not None and stats.shuffle_bytes \
@@ -100,8 +100,7 @@ class Observer:
         # durable-tier calibration (DESIGN §10): live segment I/O this run
         # caused (autoflushed writes, spill rehydration) prices the cost
         # model's spill/load charges
-        if self.cost_model is not None \
-                and getattr(stats, "storage_io_bytes", 0) \
+        if self.cost_model is not None and stats.storage_io_bytes \
                 and stats.storage_io_s > 0:
             self.cost_model.observe_io(stats.storage_io_bytes,
                                        stats.storage_io_s)

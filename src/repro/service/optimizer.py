@@ -23,12 +23,13 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.advisor import (GreedySelector, PartitioningDecision,
                             apply_decision)
+from ..obs.tracer import TRACER as _TRACER, span as _span
 from ..core.features import build_state, candidate_features
 from ..core.history import HistoryStore
 from ..core.partitioner import (SaltedPartitioner, dedupe,
@@ -37,6 +38,10 @@ from ..data.capacity import plan_capacity_map
 from ..data.skew import HeavyHitterSketch
 from .cost_model import LayoutScore, WhatIfCostModel
 from .observer import Observer
+
+#: in-memory why-record ring bound — enough to audit a long soak without
+#: letting a permanently-attached autopilot grow without bound
+WHY_RECORDS_CAP = 512
 
 
 @dataclass
@@ -83,6 +88,7 @@ class TickReport:
         default_factory=list)      # (dataset, candidate sig, score)
     applied: List[AppliedDecision] = field(default_factory=list)
     compacted: int = 0
+    why: List[Dict[str, Any]] = field(default_factory=list)
 
 
 class StorageOptimizer:
@@ -102,6 +108,7 @@ class StorageOptimizer:
         self.mesh = mesh
         self.clock = clock
         self.reports: List[TickReport] = []
+        self.why_records: List[Dict[str, Any]] = []
         self._cooldown: Dict[str, int] = {}
         self._tick_no = 0
         self._thread: Optional[threading.Thread] = None
@@ -126,6 +133,38 @@ class StorageOptimizer:
         if self.cfg.skew_actions is not None:
             return bool(self.cfg.skew_actions)
         return bool(getattr(self.store, "adaptive_capacity", False))
+
+    # -- decision explainability (DESIGN §13) --------------------------------
+    @staticmethod
+    def _gate(name: str, passed: bool, **detail) -> Dict[str, Any]:
+        g: Dict[str, Any] = {"gate": name, "passed": bool(passed)}
+        for k, v in detail.items():
+            g[k] = float(v) if isinstance(v, (int, float)) else v
+        return g
+
+    def _why(self, report: TickReport, dataset: str, action: str,
+             candidate: str, score: Optional[LayoutScore],
+             gates: List[Dict[str, Any]], accepted: bool) -> None:
+        """One structured why-record: the candidate's priced score (full
+        gate math) plus every gate's verdict, whether it accepted or
+        rejected the candidate.  Records accumulate on the tick's report;
+        :meth:`tick` batches them into ``decisions.log`` and the bounded
+        in-memory ring behind :meth:`explain`."""
+        report.why.append({
+            "kind": "why", "tick": self._tick_no, "now": float(report.now),
+            "dataset": dataset, "action": action, "candidate": candidate,
+            "accepted": bool(accepted),
+            "score": (score.explain(self.cfg.hysteresis,
+                                    self.cfg.horizon_windows)
+                      if score is not None else None),
+            "gates": gates,
+        })
+
+    def explain(self, limit: Optional[int] = None) -> List[Dict[str, Any]]:
+        """Recent why-records (oldest first, bounded in memory at
+        :data:`WHY_RECORDS_CAP`)."""
+        recs = list(self.why_records)
+        return recs[-limit:] if limit else recs
 
     def _observed_hot_fraction(self, cands, now: float) -> float:
         """Largest heavy-hitter share the Observer's per-candidate stats
@@ -153,38 +192,58 @@ class StorageOptimizer:
         # -- hot-key splitting ------------------------------------------------
         base = next((c for c in cands if c.is_keyed and c.graph is not None),
                     None)
-        if (base is not None and "salt" not in cur_sig
-                and ds.skew() >= self.cfg.skew_threshold
-                and self._observed_hot_fraction(cands, now)
-                >= self.cfg.hot_key_fraction):
-            # score with an empty-keyed preview: a salted signature never
-            # matches Alg. 4, so its elision count (0) prices the benefit
-            # the split gives up, against the padding bytes it wins back
-            preview = SaltedPartitioner(
-                graph=base.graph, strategy=base.strategy,
-                source_dataset=base.source_dataset, origin=base.origin,
-                hot_keys=(), salt_factor=self.cfg.salt_factor)
-            score = self.cost_model.score(
-                name, float(ds.nbytes), ds.num_workers, preview,
-                ds.partitioner, self.history, now=now,
-                window_s=self.cfg.window_s, groups=groups,
-                durable=self.store.is_durable and self.store.autoflush,
-                source_spilled=self.store.is_durable
-                and self.store.is_spilled(name),
-                current_padded_bytes=float(ds.padded_bytes),
-                current_valid_bytes=float(ds.valid_bytes),
-                # salted counts are near-balanced; power-of-two rounding
-                # bounds the residual padding at 2×, 1.25× is the midpoint
-                candidate_padded_bytes=1.25 * float(ds.valid_bytes))
-            report.considered.append((name, preview.signature(), score))
-            if (score.runs_in_window >= self.cfg.min_runs
-                    and score.worth_it(self.cfg.hysteresis,
-                                       self.cfg.horizon_windows)):
-                decision = PartitioningDecision(
-                    dataset=name, candidate=base, features=[],
-                    consumers=[], action_index=-1, state=None,
-                    elapsed_s=0.0)
-                return ("salt", name, decision, score)
+        if base is not None and "salt" not in cur_sig:
+            skew = float(ds.skew())
+            hot = self._observed_hot_fraction(cands, now)
+            gates = [
+                self._gate("skew_threshold",
+                           skew >= self.cfg.skew_threshold,
+                           observed=skew, required=self.cfg.skew_threshold),
+                self._gate("hot_key_fraction",
+                           hot >= self.cfg.hot_key_fraction,
+                           observed=hot, required=self.cfg.hot_key_fraction),
+            ]
+            if not all(g["passed"] for g in gates):
+                self._why(report, name, "salt", "", None, gates, False)
+            else:
+                # score with an empty-keyed preview: a salted signature
+                # never matches Alg. 4, so its elision count (0) prices the
+                # benefit the split gives up, against the padding bytes it
+                # wins back
+                preview = SaltedPartitioner(
+                    graph=base.graph, strategy=base.strategy,
+                    source_dataset=base.source_dataset, origin=base.origin,
+                    hot_keys=(), salt_factor=self.cfg.salt_factor)
+                score = self.cost_model.score(
+                    name, float(ds.nbytes), ds.num_workers, preview,
+                    ds.partitioner, self.history, now=now,
+                    window_s=self.cfg.window_s, groups=groups,
+                    durable=self.store.is_durable and self.store.autoflush,
+                    source_spilled=self.store.is_durable
+                    and self.store.is_spilled(name),
+                    current_padded_bytes=float(ds.padded_bytes),
+                    current_valid_bytes=float(ds.valid_bytes),
+                    # salted counts are near-balanced; power-of-two rounding
+                    # bounds the residual padding at 2×, 1.25× is the
+                    # midpoint
+                    candidate_padded_bytes=1.25 * float(ds.valid_bytes))
+                report.considered.append((name, preview.signature(), score))
+                gates.append(self._gate(
+                    "min_runs", score.runs_in_window >= self.cfg.min_runs,
+                    observed=score.runs_in_window,
+                    required=self.cfg.min_runs))
+                gates.append(self._gate(
+                    "worth_it", score.worth_it(self.cfg.hysteresis,
+                                               self.cfg.horizon_windows)))
+                accepted = all(g["passed"] for g in gates)
+                self._why(report, name, "salt", preview.signature(), score,
+                          gates, accepted)
+                if accepted:
+                    decision = PartitioningDecision(
+                        dataset=name, candidate=base, features=[],
+                        consumers=[], action_index=-1, state=None,
+                        elapsed_s=0.0)
+                    return ("salt", name, decision, score)
         # -- capacity rebucketing ---------------------------------------------
         if ds.partitioner is None:
             return None
@@ -209,9 +268,18 @@ class StorageOptimizer:
             candidate_padded_bytes=per_slot * new_slots,
             local=True)             # same partitioner: node-local rewrite
         report.considered.append((name, "rebucket", score))
-        if (score.runs_in_window >= self.cfg.min_runs
-                and score.worth_it(self.cfg.hysteresis,
-                                   self.cfg.horizon_windows)):
+        gates = [
+            self._gate("min_runs",
+                       score.runs_in_window >= self.cfg.min_runs,
+                       observed=score.runs_in_window,
+                       required=self.cfg.min_runs),
+            self._gate("worth_it", score.worth_it(self.cfg.hysteresis,
+                                                  self.cfg.horizon_windows)),
+        ]
+        accepted = all(g["passed"] for g in gates)
+        self._why(report, name, "rebucket", "rebucket", score, gates,
+                  accepted)
+        if accepted:
             return ("rebucket", name, None, score)
         return None
 
@@ -241,6 +309,10 @@ class StorageOptimizer:
         (LogicalClock): scoring a tick must not age the history it scores,
         or idle polling alone would push observed runs out of the recency
         window."""
+        with _span("autopilot.tick", "autopilot") as tsp:
+            return self._tick(tsp)
+
+    def _tick(self, tsp) -> TickReport:
         peek = getattr(self.clock, "peek", None)
         now = peek() if peek is not None else self.clock()
         self._tick_no += 1
@@ -292,11 +364,24 @@ class StorageOptimizer:
                     source_spilled=self.store.is_durable
                     and self.store.is_spilled(name))
                 report.considered.append((name, cand.signature(), score))
-                if (not (ds.partitioner is not None and
-                         ds.partitioner.signature() == cand.signature())
-                        and score.runs_in_window >= self.cfg.min_runs
-                        and score.worth_it(self.cfg.hysteresis,
-                                           self.cfg.horizon_windows)):
+                same = (ds.partitioner is not None and
+                        ds.partitioner.signature() == cand.signature())
+                gates = [
+                    self._gate("not_current_layout", not same,
+                               current=(ds.partitioner.signature()
+                                        if ds.partitioner else "")),
+                    self._gate("min_runs",
+                               score.runs_in_window >= self.cfg.min_runs,
+                               observed=score.runs_in_window,
+                               required=self.cfg.min_runs),
+                    self._gate("worth_it",
+                               score.worth_it(self.cfg.hysteresis,
+                                              self.cfg.horizon_windows)),
+                ]
+                accepted = all(g["passed"] for g in gates)
+                self._why(report, name, "repartition", cand.signature(),
+                          score, gates, accepted)
+                if accepted:
                     to_apply.append(("repartition", name, decision, score))
                     queued = True
             # skew phase (DESIGN §12): when no layout change was queued,
@@ -308,51 +393,73 @@ class StorageOptimizer:
                 if skew is not None:
                     to_apply.append(skew)
 
+        if report.why:
+            # one bounded in-memory ring + one JSONL row per tick (the
+            # records ride together so a busy tick costs one fsync).
+            # Logged BEFORE the applies so the catalog reads
+            # considered-then-applied and the newest row stays the latest
+            # applied decision, as pre-§13 consumers of decisions() expect.
+            self.why_records.extend(report.why)
+            del self.why_records[:-WHY_RECORDS_CAP]
+            if self.store.durable is not None:
+                self.store.durable.log_decision({
+                    "kind": "why", "tick": self._tick_no,
+                    "now": float(now), "count": len(report.why),
+                    "records": report.why})
+
         for kind, name, decision, score in to_apply:
             # apply: materialize off to the side, atomically flip (swap)
-            ds_bytes = float(self.store.read(name).nbytes)
-            io0 = self.store.io_snapshot()
-            t1 = time.perf_counter()
-            if kind == "repartition":
-                new, moved = apply_decision(self.store, decision,
-                                            mesh=self.mesh)
-            elif kind == "salt":
-                salted = self._make_salted(name, decision.candidate)
-                if salted is None:
-                    continue   # sketch found no hot key at apply time
-                decision = PartitioningDecision(
-                    dataset=name, candidate=salted,
-                    features=decision.features,
-                    consumers=decision.consumers, action_index=-1,
-                    state=decision.state, elapsed_s=decision.elapsed_s)
-                new, moved = self.store.repartition(
-                    self.store.read(name), salted, mesh=self.mesh,
-                    swap=True)
-            else:   # rebucket: same partitioner, node-local re-layout
-                new, moved = self.store.rebucket(name)
-            wall = time.perf_counter() - t1
-            # the wall includes any autoflush persist; attribute that slice
-            # to the io calibration and only the remainder to the shuffle,
-            # so score()'s repartition_s + io_s never double-charges
-            io_wall = self._feed_io_calibration(io0)
-            if kind != "rebucket":   # rebucket moves 0 bytes — no sample
-                self.cost_model.observe_repartition(
-                    ds_bytes, max(wall - io_wall, 0.0))
-            self._cooldown[name] = self.cfg.cooldown_ticks
-            path = "host"
-            if self.store.write_log and \
-                    self.store.write_log[-1].get("name") == name:
-                path = self.store.write_log[-1].get("path", "host")
-            applied = AppliedDecision(
-                dataset=name, decision=decision, score=score,
-                generation=new.generation, moved_bytes=moved,
-                repartition_wall_s=wall, path=path, kind=kind)
-            report.applied.append(applied)
-            self._catalog_log(applied, now)
+            with _span("autopilot.apply", "autopilot", dataset=name,
+                       kind=kind) as asp:
+                ds_bytes = float(self.store.read(name).nbytes)
+                io0 = self.store.io_snapshot()
+                t1 = time.perf_counter()
+                if kind == "repartition":
+                    new, moved = apply_decision(self.store, decision,
+                                                mesh=self.mesh)
+                elif kind == "salt":
+                    salted = self._make_salted(name, decision.candidate)
+                    if salted is None:
+                        asp.set(skipped="no_hot_key_at_apply")
+                        continue   # sketch found no hot key at apply time
+                    decision = PartitioningDecision(
+                        dataset=name, candidate=salted,
+                        features=decision.features,
+                        consumers=decision.consumers, action_index=-1,
+                        state=decision.state, elapsed_s=decision.elapsed_s)
+                    new, moved = self.store.repartition(
+                        self.store.read(name), salted, mesh=self.mesh,
+                        swap=True)
+                else:   # rebucket: same partitioner, node-local re-layout
+                    new, moved = self.store.rebucket(name)
+                wall = time.perf_counter() - t1
+                # the wall includes any autoflush persist; attribute that
+                # slice to the io calibration and only the remainder to the
+                # shuffle, so score()'s repartition_s + io_s never
+                # double-charges
+                io_wall = self._feed_io_calibration(io0)
+                if kind != "rebucket":   # rebucket moves 0 bytes — no sample
+                    self.cost_model.observe_repartition(
+                        ds_bytes, max(wall - io_wall, 0.0))
+                self._cooldown[name] = self.cfg.cooldown_ticks
+                path = "host"
+                if self.store.write_log and \
+                        self.store.write_log[-1].get("name") == name:
+                    path = self.store.write_log[-1].get("path", "host")
+                applied = AppliedDecision(
+                    dataset=name, decision=decision, score=score,
+                    generation=new.generation, moved_bytes=moved,
+                    repartition_wall_s=wall, path=path, kind=kind)
+                asp.set(generation=new.generation, moved_bytes=int(moved),
+                        path=path)
+                report.applied.append(applied)
+                self._catalog_log(applied, now)
         if self.cfg.max_history_records is not None:
             report.compacted = self.history.compact(
                 self.cfg.max_history_records)
         self.reports.append(report)
+        tsp.set(tick=self._tick_no, considered=len(report.considered),
+                applied=len(report.applied))
         return report
 
     # -- durable-store integration (DESIGN §10) ------------------------------
@@ -405,14 +512,18 @@ class StorageOptimizer:
         if self._thread is not None and self._thread.is_alive():
             raise RuntimeError("optimizer already running")
         self._stop.clear()
+        # capture the starting thread's span context so background ticks
+        # parent (via a flow arrow) to whatever started the service
+        ctx = _TRACER.context()
 
         def _loop():
-            while not self._stop.wait(period_s):
-                try:
-                    self.tick()
-                except BaseException as e:     # noqa: BLE001 — report & halt
-                    self.last_error = e
-                    return
+            with _TRACER.attach(ctx):
+                while not self._stop.wait(period_s):
+                    try:
+                        self.tick()
+                    except BaseException as e:  # noqa: BLE001 — report & halt
+                        self.last_error = e
+                        return
 
         self._thread = threading.Thread(
             target=_loop, name="lachesis-autopilot", daemon=True)
@@ -464,6 +575,12 @@ class Autopilot:
 
     def tick(self) -> TickReport:
         return self.optimizer.tick()
+
+    def explain(self, limit: Optional[int] = None) -> List[Dict[str, Any]]:
+        """Structured why-records for recent ticks (see
+        :meth:`StorageOptimizer.explain`); the surface
+        ``session.explain_decisions()`` reads."""
+        return self.optimizer.explain(limit)
 
     def start(self, period_s: float = 1.0) -> None:
         self.optimizer.start(period_s)

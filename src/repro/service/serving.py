@@ -42,6 +42,7 @@ Usage::
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -51,6 +52,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.dsl import SetHandle, Workload
+from ..obs.tracer import TRACER as _TRACER, span as _span
 
 __all__ = ["ServingFrontend", "ServeTicket", "Tenant", "NamespacedWorkload",
            "AdmissionError", "TenantBudgetError", "TENANT_SEP"]
@@ -107,6 +109,10 @@ class ServeTicket:
         self._done = threading.Event()
         self._result: Any = None
         self._error: Optional[BaseException] = None
+        # tracing link back to the submitting thread's span (None when
+        # tracing is off): the worker attaches it so the ticket's spans
+        # parent across the pool handoff
+        self._trace_ctx = _TRACER.context()
 
     def done(self) -> bool:
         return self._done.is_set()
@@ -241,6 +247,32 @@ class ServingFrontend:
         self._counters_lock = threading.Lock()
         self._tenants: Dict[str, Tenant] = {}
         self._closed = False
+        # metrics (DESIGN §13): counters stay in _Counters (stats() is
+        # the authoritative view); the registry gets them via a snapshot
+        # callback plus a real latency histogram, labeled per frontend
+        self._metric_labels = {"frontend":
+                               f"f{next(ServingFrontend._ids)}"}
+        reg = getattr(session, "metrics_registry", None)
+        self._latency_hist = None
+        if reg is not None:
+            self._latency_hist = reg.histogram(
+                "serving_latency_seconds", "serve ticket latency",
+                self._metric_labels)
+            reg.register_callback(self, ServingFrontend._metric_samples)
+
+    _ids = itertools.count(1)
+
+    def _metric_samples(self):
+        for k, v in self.stats().items():
+            yield f"serving_{k}", self._metric_labels, float(v)
+
+    def metrics(self) -> Dict[str, Any]:
+        """Versioned JSON snapshot of the session registry this frontend
+        reports into (serving counters + latency histogram included)."""
+        return self.session.metrics_registry.snapshot()
+
+    def metrics_text(self) -> str:
+        return self.session.metrics_registry.prometheus_text()
 
     @property
     def store(self):
@@ -277,38 +309,45 @@ class ServingFrontend:
             self._counters.submitted += 1
         backend_name = (self.session.backend if backend is None else backend)
 
-        key: Optional[Tuple] = None
-        if (self.coalesce_default if coalesce is None else coalesce) \
-                and self._read_only(workload):
-            # the PhysicalPlan cache key IS the coalescing identity: IR ×
-            # params × backend × workers × layout generations.  Identical
-            # queued requests resolve the same key; a concurrent
-            # generation flip changes it, so no cross-layout sharing.
-            key = (tenant, self.planner.plan_key(workload, backend_name))
-            with self._inflight_lock:
-                leader = self._inflight.get(key)
-                if leader is not None and not leader.done():
-                    leader.coalesced_with += 1
-                    with self._counters_lock:
-                        self._counters.coalesced += 1
-                    return leader
+        with _span("serve.submit", "serve", tenant=tenant or "",
+                   workload=getattr(workload, "app_id", "?")) as sub_sp:
+            key: Optional[Tuple] = None
+            if (self.coalesce_default if coalesce is None else coalesce) \
+                    and self._read_only(workload):
+                # the PhysicalPlan cache key IS the coalescing identity:
+                # IR × params × backend × workers × layout generations.
+                # Identical queued requests resolve the same key; a
+                # concurrent generation flip changes it, so no
+                # cross-layout sharing.
+                key = (tenant, self.planner.plan_key(workload, backend_name))
+                with self._inflight_lock:
+                    leader = self._inflight.get(key)
+                    if leader is not None and not leader.done():
+                        leader.coalesced_with += 1
+                        with self._counters_lock:
+                            self._counters.coalesced += 1
+                        sub_sp.set(outcome="coalesced")
+                        return leader
 
-        admitted = self._slots.acquire(timeout=timeout) if block \
-            else self._slots.acquire(blocking=False)
-        if not admitted:
+            admitted = self._slots.acquire(timeout=timeout) if block \
+                else self._slots.acquire(blocking=False)
+            if not admitted:
+                with self._counters_lock:
+                    self._counters.rejected += 1
+                sub_sp.set(outcome="rejected")
+                raise AdmissionError(
+                    f"serving queue full ({self.max_workers} workers + "
+                    f"{self.max_queue} waiting); retry or submit(block=True)")
+            ticket = ServeTicket(key=key)
+            if key is not None:
+                with self._inflight_lock:
+                    self._inflight[key] = ticket
             with self._counters_lock:
-                self._counters.rejected += 1
-            raise AdmissionError(
-                f"serving queue full ({self.max_workers} workers + "
-                f"{self.max_queue} waiting); retry or submit(block=True)")
-        ticket = ServeTicket(key=key)
-        if key is not None:
-            with self._inflight_lock:
-                self._inflight[key] = ticket
-        with self._counters_lock:
-            self._counters.admitted += 1
-        self._pool.submit(self._run_ticket, ticket, workload, backend_name)
-        return ticket
+                self._counters.admitted += 1
+            sub_sp.set(outcome="admitted")
+            self._pool.submit(self._run_ticket, ticket, workload,
+                              backend_name)
+            return ticket
 
     def run(self, workload: Workload, *, timeout: Optional[float] = None,
             **kw):
@@ -326,16 +365,25 @@ class ServingFrontend:
         from ..api import RunResult
         from ..core.executor import plan_and_execute
         try:
-            hooks = tuple(self.session.run_hooks) if self.observe else ()
-            history = self.session.history if self.observe else None
-            vals, stats, plan = plan_and_execute(
-                self.planner, self.executor, workload, backend,
-                history=history, hooks=hooks)
+            # adopt the submitting thread's span as parent (cross-pool
+            # link; no-op when tracing is off or was off at submit time)
+            with _TRACER.attach(ticket._trace_ctx), \
+                    _span("serve.ticket", "serve",
+                          workload=getattr(workload, "app_id", "?")) as tsp:
+                hooks = tuple(self.session.run_hooks) if self.observe else ()
+                history = self.session.history if self.observe else None
+                vals, stats, plan = plan_and_execute(
+                    self.planner, self.executor, workload, backend,
+                    history=history, hooks=hooks)
+                tsp.set(cache_hit=stats.plan_cache_hit,
+                        coalesced_with=ticket.coalesced_with)
             ticket._finish(result=RunResult(values=vals, stats=stats,
                                             plan=plan, workload=workload))
             with self._counters_lock:
                 self._counters.completed += 1
                 self._counters.latencies_s.append(ticket.latency_s)
+            if self._latency_hist is not None:
+                self._latency_hist.observe(ticket.latency_s)
         except BaseException as e:       # noqa: BLE001 — per-ticket isolation
             ticket._finish(error=e)
             with self._counters_lock:

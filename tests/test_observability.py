@@ -1,0 +1,527 @@
+"""Observability subsystem tests (DESIGN §13): span tracer, metrics
+registry, Chrome-trace exporter, schema versioning, and the Autopilot's
+decision explainability (why-records).
+
+The registry concurrency tests reuse the ``_Freeze`` sync-point barrier
+from test_serving_races so a snapshot is provably taken while writer
+threads are mid-stream, not after they quiesced.
+"""
+
+import gc
+import json
+import threading
+
+import pytest
+
+from repro import obs
+from repro.api import Session
+from repro.core import Workload
+from repro.data.partition_store import PartitionStore
+from repro.data.storage.durable import (DECISIONS_SCHEMA_VERSION,
+                                        DurableStore)
+from repro.obs.export import to_chrome_trace
+from repro.obs.metrics import (METRICS_SCHEMA_VERSION, MetricsRegistry,
+                               validate_snapshot)
+from repro.obs.tracer import NULL_SPAN, Span, TraceContext, TRACER
+from repro.service import (AutopilotConfig, LogicalClock, drift_tables,
+                           q_orderkey)
+
+from test_serving_races import _Freeze
+
+
+@pytest.fixture(autouse=True)
+def _tracer_reset():
+    """Every test starts and ends with the process-global tracer off,
+    empty, and at default capacity — tracing state must never leak
+    between tests."""
+    obs.configure(mode="off", buffer=65536, sample_every=16)
+    obs.clear_spans()
+    yield
+    obs.configure(mode="off", buffer=65536, sample_every=16)
+    obs.clear_spans()
+
+
+def _seed_session(root=None, n=600):
+    store = PartitionStore(num_workers=4, backend="host",
+                           root=str(root) if root else None)
+    sess = Session(store)
+    for name, data in drift_tables(n_lineitem=n, n_orders=200,
+                                   n_parts=80).items():
+        sess.write(name, data)
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_tracing_off_by_default_is_shared_noop():
+    assert obs.tracing_mode() == "off"
+    # the disabled path allocates nothing: every call returns the one
+    # shared null span, and nothing is recorded
+    sp = obs.span("anything", "cat", k=1)
+    assert sp is NULL_SPAN
+    assert obs.span("other") is sp
+    with sp as s:
+        s.set(ignored=True)
+    assert obs.finished_spans() == []
+
+
+def test_span_tree_parenting_and_annotations():
+    obs.enable("full")
+    with obs.span("root", "t", a=1) as r:
+        with obs.span("child", "t") as c:
+            c.set(b=2)
+    spans = {s.name: s for s in obs.finished_spans()}
+    assert set(spans) == {"root", "child"}
+    root, child = spans["root"], spans["child"]
+    assert root.parent_id is None
+    assert child.parent_id == root.span_id
+    assert child.trace_id == root.trace_id
+    assert root.args == {"a": 1} and child.args == {"b": 2}
+    assert root.dur_s >= child.dur_s >= 0
+    # children nest inside the parent interval on one thread
+    assert root.t0 <= child.t0 and child.t1 <= root.t1
+
+
+def test_span_records_error_annotation():
+    obs.enable("full")
+    with pytest.raises(ValueError):
+        with obs.span("boom", "t"):
+            raise ValueError("x")
+    (sp,) = obs.finished_spans()
+    assert sp.args["error"] == "ValueError"
+    assert sp.t1 is not None
+
+
+def test_ring_buffer_bounds_memory():
+    obs.enable("full", buffer=8)
+    for i in range(30):
+        with obs.span(f"s{i}", "t"):
+            pass
+    spans = obs.finished_spans()
+    assert len(spans) == 8
+    assert [s.name for s in spans] == [f"s{i}" for i in range(22, 30)]
+    assert TRACER.dropped == 22
+    st = TRACER.stats()
+    assert st["buffered"] == 8 and st["dropped"] == 22
+
+
+def test_sampled_mode_keeps_whole_trees():
+    obs.enable("sampled", sample_every=3)
+    for i in range(12):
+        with obs.span(f"root{i}", "t"):
+            with obs.span(f"child{i}", "t"):
+                pass
+    spans = obs.finished_spans()
+    roots = {s.name for s in spans if s.name.startswith("root")}
+    children = {s.name for s in spans if s.name.startswith("child")}
+    assert len(roots) == 4          # 1-in-3 of 12 roots
+    # a child records iff its root did — sampled traces are whole trees
+    assert children == {f"child{r[len('root'):]}" for r in roots}
+
+
+def test_cross_thread_parenting_and_flow():
+    obs.enable("full")
+    ctxs = []
+
+    def worker(ctx):
+        with TRACER.attach(ctx):
+            with obs.span("work", "t"):
+                pass
+
+    with obs.span("submit", "t") as sub:
+        ctx = TRACER.context()
+        ctxs.append(ctx)
+        t = threading.Thread(target=worker, args=(ctx,), name="w-0")
+        t.start()
+        t.join()
+    spans = {s.name: s for s in obs.finished_spans()}
+    work, submit = spans["work"], spans["submit"]
+    assert work.parent_id == submit.span_id
+    assert work.trace_id == submit.trace_id
+    assert work.tid != submit.tid
+    assert work.flow_from == ctxs[0]
+    # the exporter draws the handoff as a flow-arrow pair
+    ev = to_chrome_trace(obs.finished_spans())["traceEvents"]
+    s = [e for e in ev if e["ph"] == "s"]
+    f = [e for e in ev if e["ph"] == "f"]
+    assert len(s) == len(f) == 1
+    assert s[0]["id"] == f[0]["id"]
+    assert s[0]["tid"] == submit.tid and f[0]["tid"] == work.tid
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("ops_total", "ops")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("depth")
+    g.set(4)
+    g.add(-1.5)
+    assert g.value == 2.5
+    h = reg.histogram("lat_s", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["buckets"] == [(0.1, 1), (1.0, 2)]
+    assert snap["inf"] == snap["count"] == 3
+    assert snap["sum"] == pytest.approx(5.55)
+    # same (name, labels) resolves to the same instrument; a kind clash
+    # is a hard error, not a silent shadow
+    assert reg.counter("ops_total") is c
+    assert reg.counter("ops_total", labels={"x": "1"}) is not c
+    with pytest.raises(TypeError):
+        reg.gauge("ops_total")
+
+
+def test_histogram_samples_le_ascending_inf_last():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s", buckets=(1.0, 0.1, 10.0))  # unsorted input
+    h.observe(0.5)
+    rows = list(h.samples())
+    les = [dict(labels)["le"] for name, labels, _v in rows
+           if name.endswith("_bucket")]
+    assert les == ["0.1", "1", "10", "+Inf"]
+    text = reg.prometheus_text()
+    bucket_lines = [ln for ln in text.splitlines() if "_bucket" in ln]
+    # the exposition must preserve that order — a lexicographic sort
+    # would put +Inf first and scramble the cumulative counts
+    assert [ln.split('le="')[1].split('"')[0] for ln in bucket_lines] \
+        == ["0.1", "1", "10", "+Inf"]
+
+
+def test_prometheus_text_shape():
+    reg = MetricsRegistry()
+    reg.counter("reqs_total", "requests", labels={"tenant": "a"}).inc(3)
+    reg.histogram("lat_s", "latency", buckets=(0.1,)).observe(0.05)
+    text = reg.prometheus_text()
+    assert '# TYPE reqs_total counter' in text
+    assert '# HELP reqs_total requests' in text
+    assert 'reqs_total{tenant="a"} 3' in text
+    assert '# TYPE lat_s histogram' in text
+    assert 'lat_s_bucket{le="0.1"} 1' in text
+    assert 'lat_s_bucket{le="+Inf"} 1' in text
+    assert 'lat_s_count 1' in text
+
+
+def test_registry_concurrency_exact_totals():
+    """N writer threads hammer one counter + one histogram; a snapshot is
+    taken while thread 0 is provably parked mid-stream (the _Freeze sync
+    point from the serving race harness), then final totals must be
+    exact — no lost increments."""
+    reg = MetricsRegistry()
+    c = reg.counter("ops_total")
+    h = reg.histogram("lat_s", buckets=(0.1, 1.0))
+    freeze = _Freeze()
+    N, M = 8, 400
+
+    def worker(i):
+        for j in range(M):
+            if i == 0 and j == M // 2:
+                freeze()            # park with the other writers in flight
+            c.inc()
+            h.observe(0.05 * (1 + (i + j) % 3))
+
+    threads = [threading.Thread(target=worker, args=(i,), name=f"w{i}")
+               for i in range(N)]
+    for t in threads:
+        t.start()
+    assert freeze.reached.wait(30)
+    mid = h.snapshot()              # mid-flight: internally consistent
+    cums = [n for _b, n in mid["buckets"]]
+    assert cums == sorted(cums) and cums[-1] <= mid["count"]
+    freeze.release()
+    for t in threads:
+        t.join(30)
+    assert c.value == N * M
+    snap = h.snapshot()
+    assert snap["count"] == N * M
+    assert snap["sum"] == pytest.approx(sum(
+        0.05 * (1 + (i + j) % 3) for i in range(N) for j in range(M)))
+
+
+def test_callback_weakref_lets_owner_die():
+    reg = MetricsRegistry()
+
+    class Owner:
+        def samples(self):
+            yield "owner_alive", {}, 1.0
+
+    o = Owner()
+    reg.register_callback(o, Owner.samples)
+    assert "owner_alive" in reg.snapshot()["metrics"]
+    del o
+    gc.collect()
+    assert "owner_alive" not in reg.snapshot()["metrics"]
+    assert reg._callbacks == []     # pruned, not just skipped
+
+
+def test_broken_callback_never_breaks_scrape():
+    reg = MetricsRegistry()
+    reg.counter("good_total").inc()
+
+    class Bad:
+        def samples(self):
+            raise RuntimeError("scrape me not")
+
+    bad = Bad()
+    reg.register_callback(bad, Bad.samples)
+    snap = reg.snapshot()
+    assert "good_total" in snap["metrics"]
+
+
+def test_snapshot_versioned_and_validated():
+    reg = MetricsRegistry()
+    reg.counter("x_total").inc()
+    snap = reg.snapshot()
+    assert snap["version"] == METRICS_SCHEMA_VERSION
+    ok, msg = validate_snapshot(snap)
+    assert ok and msg == ""
+    ok, msg = validate_snapshot({"version": METRICS_SCHEMA_VERSION + 1})
+    assert not ok and str(METRICS_SCHEMA_VERSION + 1) in msg
+    ok, _ = validate_snapshot({})
+    assert not ok
+    json.dumps(snap)                # snapshot must be pure JSON
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace exporter — golden shape
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_golden_shape():
+    """Hand-built spans → the exact event list the exporter must emit:
+    thread metadata first, X events rebased to t=0 in µs, args carrying
+    span/parent/trace ids, and an s/f flow pair for the handoff."""
+    root = Span(name="root", cat="t", span_id=7, parent_id=None, trace_id=3,
+                tid=10, thread_name="MainThread", t0=100.0, t1=100.005,
+                args={"k": "v"})
+    ctx = TraceContext(trace_id=3, span_id=7, tid=10,
+                       thread_name="MainThread", captured_at=100.001)
+    child = Span(name="child", cat="t", span_id=8, parent_id=7, trace_id=3,
+                 tid=20, thread_name="pool-0", t0=100.002, t1=100.004,
+                 args={}, flow_from=ctx)
+    open_span = Span(name="open", cat="t", span_id=9, parent_id=None,
+                     trace_id=4, tid=10, thread_name="MainThread",
+                     t0=100.001, t1=None)   # unfinished: must be dropped
+    doc = to_chrome_trace([child, root, open_span], metadata={"who": "test"})
+    assert doc["traceEvents"] == [
+        {"ph": "M", "name": "thread_name", "pid": 1, "tid": 10,
+         "args": {"name": "MainThread"}},
+        {"ph": "M", "name": "thread_name", "pid": 1, "tid": 20,
+         "args": {"name": "pool-0"}},
+        {"ph": "X", "name": "root", "cat": "t", "pid": 1, "tid": 10,
+         "ts": 0.0, "dur": 5000.0,
+         "args": {"k": "v", "span_id": 7, "trace_id": 3}},
+        {"ph": "X", "name": "child", "cat": "t", "pid": 1, "tid": 20,
+         "ts": 2000.0, "dur": 2000.0,
+         "args": {"span_id": 8, "parent_id": 7, "trace_id": 3}},
+        {"ph": "s", "id": 1, "name": "handoff", "cat": "flow", "pid": 1,
+         "tid": 10, "ts": 1000.0},
+        {"ph": "f", "id": 1, "name": "handoff", "cat": "flow", "pid": 1,
+         "tid": 20, "ts": 2000.0, "bp": "e"},
+    ]
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["spans"] == 2
+    assert doc["otherData"]["who"] == "test"
+    json.dumps(doc)
+
+
+# ---------------------------------------------------------------------------
+# wiring: session / planner / serving views over the registry
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_stats_view_unchanged_and_in_registry():
+    sess = _seed_session()
+    wl = q_orderkey()
+    sess.run(wl)
+    sess.run(wl)
+    st = sess.plan_cache_stats()
+    assert {"hits", "misses", "evictions", "invalidations",
+            "size"} <= set(st)
+    assert all(isinstance(v, int) for v in st.values())
+    assert st["hits"] == 1 and st["misses"] == 1 and st["size"] == 1
+    # the same counters surface through the registry snapshot
+    metrics = sess.metrics()["metrics"]
+    assert "planner_plan_cache_hits_total" in metrics
+    assert "store_resident_bytes" in metrics
+    assert "tracer_spans_buffered" in metrics
+    ok, _ = validate_snapshot(sess.metrics())
+    assert ok
+    text = sess.metrics_text()
+    assert "# TYPE planner_plan_cache_hits_total counter" in text
+
+
+def test_session_trace_covers_all_layers(tmp_path):
+    obs.enable("full")
+    sess = _seed_session(tmp_path / "store")
+    sess.run(q_orderkey())
+    names = {s.name for s in obs.finished_spans()}
+    assert {"session.run", "planner.lookup", "planner.compile", "exec.run",
+            "exec.scan", "exec.partition", "store.write",
+            "store.install", "durable.persist"} <= names
+    path = tmp_path / "trace.json"
+    doc = sess.export_trace(str(path))
+    assert path.exists()
+    loaded = json.loads(path.read_text())
+    assert loaded["otherData"]["session_backend"] == doc[
+        "otherData"]["session_backend"] == "host"
+    # everything the run touched parents under one session.run tree
+    # (the seed writes before it are their own roots)
+    by_id = {e["args"]["span_id"]: e for e in doc["traceEvents"]
+             if e["ph"] == "X"}
+    (run,) = [e for e in by_id.values() if e["name"] == "session.run"]
+    tree = [e for e in by_id.values()
+            if e["args"]["trace_id"] == run["args"]["trace_id"]]
+    assert len(tree) >= 5
+    assert all(e is run or "parent_id" in e["args"] for e in tree)
+
+
+def _query() -> Workload:
+    wl = Workload("obs-serve-q")
+    li = wl.scan("lineitem")
+    od = wl.scan("orders")
+    j = wl.join(li, od, left_key=li["orderkey"], right_key=od["orderkey"],
+                tag="li_orders")
+    wl.aggregate(j, key=j["odate"], reducer="sum")
+    return wl
+
+
+def test_serving_ticket_spans_cross_thread_and_latency_histogram():
+    obs.enable("full")
+    sess = _seed_session()
+    front = sess.serve(max_workers=2)
+    try:
+        for _ in range(3):
+            front.run(_query(), block=True, timeout=60)
+    finally:
+        front.close()
+    spans = obs.finished_spans()
+    submits = [s for s in spans if s.name == "serve.submit"]
+    tickets = [s for s in spans if s.name == "serve.ticket"]
+    assert len(submits) == len(tickets) == 3
+    by_id = {s.span_id: s for s in spans}
+    for t in tickets:
+        # ticket spans parent across the pool handoff, with a flow link
+        assert t.flow_from is not None
+        parent = by_id[t.parent_id]
+        assert parent.tid != t.tid
+    assert {s.args["outcome"] for s in submits} == {"admitted"}
+    # the latency histogram recorded every completed ticket
+    snap = front.metrics()["metrics"]
+    counts = snap["serving_latency_seconds_count"]["samples"]
+    assert sum(s["value"] for s in counts) == 3
+    assert 'serving_latency_seconds_bucket' in front.metrics_text()
+    assert any(s["value"] == 3 for s in
+               snap["serving_completed"]["samples"])
+
+
+# ---------------------------------------------------------------------------
+# decisions.log schema versioning
+# ---------------------------------------------------------------------------
+
+def test_decisions_log_version_tolerance(tmp_path):
+    st = DurableStore(str(tmp_path / "root"))
+    st.log_decision({"kind": "applied"})
+    with open(st.decisions_path, "a") as f:
+        # a row from a future build, a pre-versioning (v1) row, a torn tail
+        f.write(json.dumps({"kind": "future",
+                            "version": DECISIONS_SCHEMA_VERSION + 1}) + "\n")
+        f.write(json.dumps({"kind": "legacy"}) + "\n")
+        f.write('{"torn')
+    with pytest.warns(RuntimeWarning, match="skipped 1 row"):
+        rows = st.decisions()
+    assert st.skipped_decisions == 1
+    assert [r["kind"] for r in rows] == ["applied", "legacy"]
+    assert rows[0]["version"] == DECISIONS_SCHEMA_VERSION
+    assert "version" not in rows[1]          # v1 rows pass through as-is
+
+
+# ---------------------------------------------------------------------------
+# Autopilot decision explainability (why-records)
+# ---------------------------------------------------------------------------
+
+def _run_autopilot(root, **cfg_kw):
+    sess = _seed_session(root, n=1500)
+    cfg = AutopilotConfig(**cfg_kw)
+    ap = sess.autopilot(clock=LogicalClock(), config=cfg)
+    for _ in range(4):
+        sess.run(q_orderkey())
+    return sess, ap, ap.tick()
+
+
+def test_why_records_explain_accepted_decisions(tmp_path):
+    # hysteresis=0: worth_it needs only a positive measured benefit, so
+    # acceptance doesn't hinge on wall-clock ratios in a loaded process
+    sess, ap, rep = _run_autopilot(tmp_path / "s", min_runs=2.0,
+                                   hysteresis=0.0)
+    assert rep.applied and rep.why
+    accepted = [w for w in rep.why if w["accepted"]]
+    assert {a.dataset for a in rep.applied} == {w["dataset"]
+                                                for w in accepted}
+    for w in rep.why:
+        assert w["kind"] == "why"
+        gate_names = [g["gate"] for g in w["gates"]]
+        assert "worth_it" in gate_names and "min_runs" in gate_names
+        assert w["accepted"] == all(g["passed"] for g in w["gates"])
+        # the priced score carries the full gate math
+        s = w["score"]
+        assert s["apply_cost_s"] == pytest.approx(
+            s["repartition_s"] + s["io_s"])
+        assert s["gated_cost_s"] == pytest.approx(
+            s["hysteresis"] * s["apply_cost_s"])
+    assert sess.explain_decisions() == ap.explain(limit=50)
+
+
+def test_why_records_explain_rejections(tmp_path):
+    # min_runs higher than the observed run count: every candidate must be
+    # rejected, and the why-record must name the failing gate with its
+    # observed-vs-required numbers
+    sess, _ap, rep = _run_autopilot(tmp_path / "s", min_runs=100.0)
+    assert not rep.applied and rep.why
+    for w in rep.why:
+        assert not w["accepted"]
+        (mr,) = [g for g in w["gates"] if g["gate"] == "min_runs"]
+        assert not mr["passed"]
+        assert mr["observed"] < mr["required"] == 100.0
+
+
+def test_why_records_survive_into_fresh_session(tmp_path):
+    root = tmp_path / "s"
+    _sess, ap, rep = _run_autopilot(root, min_runs=2.0)
+    # a fresh session over the same durable root explains past decisions
+    # from decisions.log without any attached autopilot
+    sess2 = Session(PartitionStore(num_workers=4, backend="host",
+                                   root=str(root)))
+    recs = sess2.explain_decisions()
+    assert recs == ap.explain()
+    # and the batched row itself is version-stamped
+    row = [r for r in sess2.store.durable.decisions()
+           if r.get("kind") == "why"][-1]
+    assert row["version"] == DECISIONS_SCHEMA_VERSION
+    assert row["count"] == len(rep.why)
+
+
+def test_autopilot_tick_spans(tmp_path):
+    obs.enable("full")
+    _sess, _ap, rep = _run_autopilot(tmp_path / "s", min_runs=2.0,
+                                     hysteresis=0.0)
+    assert rep.applied          # apply spans below must not be vacuous
+    spans = obs.finished_spans()
+    ticks = [s for s in spans if s.name == "autopilot.tick"]
+    applies = [s for s in spans if s.name == "autopilot.apply"]
+    assert len(ticks) == 1
+    assert ticks[0].args["considered"] == len(rep.considered)
+    assert ticks[0].args["applied"] == len(rep.applied) == len(applies)
+    tick_id = ticks[0].span_id
+    assert all(a.parent_id == tick_id for a in applies)
+    for a in applies:
+        assert a.args["kind"] in ("repartition", "salt", "rebucket")
+        assert "generation" in a.args
