@@ -1,0 +1,125 @@
+"""Cluster tier benchmarks (DESIGN §14): incremental elastic rebalancing.
+
+Three rows, all at m=32 partitions with replication 1 (so ``bytes_moved``
+is exactly the primary node-to-node stream — no replica copies muddying
+the bound):
+
+* ``cluster_rebalance_node_add_m32`` — scale-out 4 → 5 directory-nodes:
+  the rebalancer streams only the partitions whose primary moved on the
+  consistent-hash ring, hard-links every unchanged part, and commits
+  with one epoch flip.  ``derived`` carries moved-partition count,
+  bytes moved, and the incremental bound (moved/m × total padded bytes)
+  the acceptance criterion pins.
+* ``cluster_rebalance_node_remove_m32`` — scale-in 5 → 4: the drained
+  node's partitions re-home onto survivors, same accounting.
+* ``cluster_full_reshuffle_m32_to_40`` — the naive baseline elastic
+  scaling competes against: changing the partition count (m=32 → 40)
+  invalidates every layout, so the store re-persists every byte.  The
+  incremental rows above should move a small fraction of this.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.cluster import ClusterConfig
+from repro.data.partition_store import PartitionStore
+
+from .common import SMOKE, emit, scale
+
+M = 32
+NODES4 = ("node-0", "node-1", "node-2", "node-3")
+
+
+def _dataset(n: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.integers(0, max(n // 16, 4), size=n).astype(np.int64),
+            "a": rng.standard_normal(n).astype(np.float64),
+            "b": rng.standard_normal(n).astype(np.float32)}
+
+
+def _fresh_store(root: str, nodes, num_workers: int, data) -> PartitionStore:
+    store = PartitionStore(
+        root=root, num_workers=num_workers,
+        cluster=ClusterConfig(nodes=nodes, replication=1))
+    store.write("events", data)
+    return store
+
+
+def _total_bytes(store: PartitionStore) -> float:
+    return float(store.read("events").padded_bytes)
+
+
+def _bench_rebalance(name: str, n: int, repeats: int, *, add=(), remove=()):
+    """Time `store.rebalance` over a membership change; fresh store per
+    repeat (a rebalance mutates placement, so runs are not idempotent)."""
+    data = _dataset(n)
+    nodes = NODES4 if add else NODES4 + ("node-4",)
+    best, res, total = float("inf"), None, 0.0
+    for _ in range(repeats):
+        root = tempfile.mkdtemp(prefix="lachesis-bench-cluster-")
+        try:
+            store = _fresh_store(root, nodes, M, data)
+            total = _total_bytes(store)
+            plan = store.plan_rebalance(add_nodes=add, remove_nodes=remove,
+                                        reason=f"bench:{name}")
+            t0 = time.perf_counter()
+            r = store.rebalance(plan=plan)
+            wall = time.perf_counter() - t0
+            if wall < best:
+                best, res = wall, r
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    bound = res.partitions_moved / M * total
+    assert res.bytes_moved <= bound + 1e-9, \
+        f"{name}: incremental bound violated ({res.bytes_moved} > {bound})"
+    emit(name, best * 1e6,
+         f"moved={res.partitions_moved}/{M} bytes_moved={res.bytes_moved} "
+         f"bound={bound:.0f} linked={res.bytes_linked} epoch={res.epoch}")
+    return best, res, total
+
+
+def _bench_full_reshuffle(n: int, repeats: int):
+    """Naive elastic baseline: m changes (32 → 40), so every layout is
+    invalid and the whole dataset is re-persisted from scratch."""
+    data = _dataset(n)
+    nbytes = sum(v.nbytes for v in data.values())
+    best = float("inf")
+    for _ in range(repeats):
+        src = tempfile.mkdtemp(prefix="lachesis-bench-cluster-")
+        dst = tempfile.mkdtemp(prefix="lachesis-bench-cluster-")
+        try:
+            store = _fresh_store(src, NODES4, M, data)
+            rows = store.read("events").gather()
+            t0 = time.perf_counter()
+            _fresh_store(dst, NODES4 + ("node-4",), 40,
+                         {k: np.asarray(v) for k, v in rows.items()})
+            best = min(best, time.perf_counter() - t0)
+        finally:
+            shutil.rmtree(src, ignore_errors=True)
+            shutil.rmtree(dst, ignore_errors=True)
+    emit("cluster_full_reshuffle_m32_to_40", best * 1e6,
+         f"bytes_rewritten={nbytes} (every partition, naive baseline)")
+    return best
+
+
+def main() -> None:
+    n = scale(400_000, 40_000)
+    repeats = 1 if SMOKE else 3
+    t_add, res_add, total = _bench_rebalance(
+        "cluster_rebalance_node_add_m32", n, repeats, add=("node-4",))
+    _bench_rebalance(
+        "cluster_rebalance_node_remove_m32", n, repeats, remove=("node-4",))
+    t_full = _bench_full_reshuffle(n, repeats)
+    frac = res_add.bytes_moved / max(total, 1.0)
+    emit("cluster_incremental_vs_full", t_add * 1e6,
+         f"speedup={t_full / max(t_add, 1e-9):.1f}x "
+         f"moved_frac={frac:.2f} (vs full re-shuffle)")
+
+
+if __name__ == "__main__":
+    main()

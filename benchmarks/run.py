@@ -20,7 +20,7 @@ def main() -> None:
     from . import (bench_reddit, bench_pagerank, bench_linear_algebra,
                    bench_tpch, bench_overhead, bench_drl_training,
                    bench_history, bench_kernels, bench_autopilot,
-                   bench_storage, bench_serving)
+                   bench_storage, bench_serving, bench_cluster)
     argv = sys.argv[1:]
     json_path = None
     if "--json" in argv:
@@ -40,6 +40,7 @@ def main() -> None:
         ("autopilot(service)", bench_autopilot.main),
         ("storage(durable)", bench_storage.main),
         ("serving(tier)", bench_serving.main),
+        ("cluster(tier)", bench_cluster.main),
     ]
     from .common import ROWS
     print("name,us_per_call,derived")

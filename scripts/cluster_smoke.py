@@ -1,0 +1,159 @@
+"""Cross-process cluster smoke test (DESIGN §14 acceptance scenario).
+
+Three phases, run as SEPARATE processes sharing one store directory:
+
+    python scripts/cluster_smoke.py write   /path/to/store
+    python scripts/cluster_smoke.py crash   /path/to/store
+    python scripts/cluster_smoke.py reopen  /path/to/store
+
+``write`` (process A): creates a two-node cluster store (directories as
+nodes, replication 2), writes datasets sharded across both nodes, and
+saves the expected bits next to the store.
+
+``crash`` (process B): reopens, starts an incremental rebalance onto a
+third node, and dies mid-stream — after the first dataset's segments
+moved but BEFORE the epoch pointer flipped (``abort_after=1``).  The
+"killed" node's partial directory is torn away to simulate losing it.
+
+``reopen`` (process C): a fresh interpreter must recover to the last
+consistent epoch (the pre-rebalance placement), read every dataset
+bit-identically, then complete a clean rebalance and — after node A's
+files are deleted outright — serve everything from the survivors.
+
+Exit code 0 on success, 1 with a reason on any violated invariant.
+Wired into scripts/verify.sh and the CI job (which persists the store
+directory between workflow steps).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+
+import numpy as np
+
+from repro.api import Session
+from repro.cluster import ClusterConfig, RebalanceAborted
+
+NUM_WORKERS = 8
+NODES = ("node-a", "node-b")
+DATASETS = ("events", "metrics")
+
+
+def expected_path(root: str) -> str:
+    return os.path.join(root, "smoke_expected.npz")
+
+
+def fail(msg: str):
+    print(f"CLUSTER SMOKE FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def canonical(store, name):
+    return {k: np.asarray(v) for k, v in store.read(name).gather().items()}
+
+
+def check_bits(store, expected):
+    for name in DATASETS:
+        got = canonical(store, name)
+        for col, want in expected[name].items():
+            if not np.array_equal(got[col], want):
+                fail(f"{name}.{col} is not bit-identical after reopen")
+
+
+def phase_write(root: str) -> None:
+    rng = np.random.default_rng(14)
+    sess = Session(store_path=root, num_workers=NUM_WORKERS,
+                   cluster=ClusterConfig(nodes=NODES, replication=2))
+    expected = {}
+    for i, name in enumerate(DATASETS):
+        data = {"k": rng.integers(0, 997, 4000).astype(np.int64),
+                "v": rng.standard_normal(4000).astype(np.float32)}
+        sess.store.write(name, data)
+        expected[name] = canonical(sess.store, name)
+    for node in NODES:
+        if not os.path.isdir(os.path.join(root, "nodes", node)):
+            fail(f"{node} holds no segments after the sharded persist")
+    if sess.store.placement_epoch != 0:
+        fail(f"fresh store should sit at epoch 0, got "
+             f"{sess.store.placement_epoch}")
+    np.savez(expected_path(root),
+             **{f"{n}/{c}": v for n, cols in expected.items()
+                for c, v in cols.items()})
+    print(f"cluster smoke write OK: {len(DATASETS)} datasets over "
+          f"{len(NODES)} nodes, epoch 0")
+
+
+def phase_crash(root: str) -> None:
+    sess = Session(store_path=root, num_workers=NUM_WORKERS)
+    if not sess.store.is_cluster:
+        fail("reopen did not detect the cluster store")
+    plan = sess.plan_rebalance(add_nodes=("node-c",), reason="smoke-crash")
+    if plan.partitions_moved <= 0:
+        fail("scale-out plan moved no partitions")
+    try:
+        sess.rebalance(plan=plan, abort_after=1)
+    except RebalanceAborted as e:
+        print(f"cluster smoke crash OK: {e}")
+    else:
+        fail("abort_after=1 did not abort before the epoch commit")
+    if sess.store.placement_epoch != 0:
+        fail("aborted rebalance must leave the epoch unflipped")
+    # the new node dies mid-rebalance: its half-streamed segments vanish
+    shutil.rmtree(os.path.join(root, "nodes", "node-c"),
+                  ignore_errors=True)
+
+
+def phase_reopen(root: str) -> None:
+    with np.load(expected_path(root)) as z:
+        expected = {}
+        for key in z.files:
+            name, col = key.split("/", 1)
+            expected.setdefault(name, {})[col] = z[key]
+
+    sess = Session(store_path=root, num_workers=NUM_WORKERS)
+    store = sess.store
+    if store.placement_epoch != 0:
+        fail(f"recovery must land on the pre-crash epoch 0, got "
+             f"{store.placement_epoch}")
+    if set(store.directory.nodes) != set(NODES):
+        fail(f"recovered membership {store.directory.nodes} != {NODES}")
+    check_bits(store, expected)
+
+    # the interrupted scale-out now completes cleanly...
+    res = sess.rebalance(add_nodes=("node-c",), reason="smoke-retry")
+    if res.epoch != 1:
+        fail(f"clean rebalance should commit epoch 1, got {res.epoch}")
+    total = sum(float(store.read(n).padded_bytes) for n in DATASETS)
+    bound = res.partitions_moved / NUM_WORKERS * total
+    if res.bytes_moved > bound + 1e-9:
+        fail(f"incremental bound violated: moved {res.bytes_moved} B > "
+             f"{bound:.0f} B ({res.partitions_moved}/{NUM_WORKERS} of "
+             f"{total:.0f} B)")
+    check_bits(store, expected)
+
+    # ...and losing a whole original node leaves every partition served
+    del sess, store
+    shutil.rmtree(os.path.join(root, "nodes", "node-a"))
+    sess2 = Session(store_path=root, num_workers=NUM_WORKERS)
+    if sess2.store.placement_epoch != 1:
+        fail("post-rebalance reopen lost the committed epoch")
+    check_bits(sess2.store, expected)
+    print(f"cluster smoke reopen OK: epoch {sess2.store.placement_epoch}, "
+          f"moved {res.partitions_moved}/{NUM_WORKERS} partitions "
+          f"({res.bytes_moved} B ≤ {bound:.0f} B bound), survivors serve "
+          f"bit-identically")
+
+
+def main() -> None:
+    if len(sys.argv) != 3 or sys.argv[1] not in ("write", "crash", "reopen"):
+        print(__doc__)
+        sys.exit(2)
+    phase, root = sys.argv[1], sys.argv[2]
+    {"write": phase_write, "crash": phase_crash,
+     "reopen": phase_reopen}[phase](root)
+
+
+if __name__ == "__main__":
+    main()

@@ -74,6 +74,20 @@ JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python scripts/serving_stress.py 10 8
 
+# Cluster tier (DESIGN §14): cross-process smoke — sharded write over two
+# directory-nodes, a rebalance killed mid-stream (before the epoch
+# commit), then a fresh process must recover the consistent epoch,
+# complete the scale-out inside the incremental bytes-moved bound, and
+# serve bit-identically from the survivors after a node's files vanish.
+CLUSTER_STORE="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_STORE" "$CLUSTER_STORE"' EXIT
+JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python scripts/cluster_smoke.py write "$CLUSTER_STORE"
+JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python scripts/cluster_smoke.py crash "$CLUSTER_STORE"
+JAX_PLATFORMS=cpu PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python scripts/cluster_smoke.py reopen "$CLUSTER_STORE"
+
 if [[ "$RUN_BENCH" == 1 ]]; then
     # skew-adaptive loop smoke (DESIGN §12): salt + rebucket ticks must
     # shrink padding waste with bit-identical consumer results

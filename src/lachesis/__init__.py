@@ -15,6 +15,7 @@ this module is the import users program against.
 """
 
 from repro.api import RunResult, Session, StalePlanError, UnknownBackendError
+from repro.cluster import ClusterConfig, RebalanceAborted
 from repro.core.backends import (Backend, BackendRegistry, REGISTRY,
                                  backend_names, resolve_backend)
 from repro.core.dsl import Workload
@@ -26,6 +27,7 @@ __all__ = [
     "LogicalPlan", "PhysicalPlan", "Planner",
     "Backend", "BackendRegistry", "REGISTRY", "backend_names",
     "resolve_backend", "UnknownBackendError", "StalePlanError",
+    "ClusterConfig", "RebalanceAborted",
 ]
 
 

@@ -100,7 +100,8 @@ class Session:
                  memory_budget_bytes: Optional[int] = None,
                  autoflush: bool = True,
                  adaptive_capacity: bool = False,
-                 metrics: Optional["_obs_metrics.MetricsRegistry"] = None):
+                 metrics: Optional["_obs_metrics.MetricsRegistry"] = None,
+                 cluster=None):
         """``store_path`` (DESIGN §10) backs the session's store with the
         durable tier: an existing store directory is reattached (its
         layouts, partitioner signatures and generation numbers carry over,
@@ -110,7 +111,14 @@ class Session:
 
         ``adaptive_capacity`` (DESIGN §12) lets the store plan non-uniform
         per-partition capacities on skewed writes and arms the Autopilot's
-        skew actions (hot-key salting, capacity rebucketing)."""
+        skew actions (hot-key salting, capacity rebucketing).
+
+        ``cluster`` (DESIGN §14): a
+        :class:`~repro.cluster.ClusterConfig` shards the durable tier
+        across directories-as-nodes behind a PartitionDirectory; requires
+        ``store_path``.  Reattaching an existing cluster store needs no
+        ``cluster`` argument — membership comes from the on-disk
+        directory epoch."""
         self.registry = registry or REGISTRY
         self._backend: Backend = self.registry.get(backend)
         if store is not None and store_path is not None:
@@ -125,7 +133,11 @@ class Session:
                                    root=store_path,
                                    memory_budget_bytes=memory_budget_bytes,
                                    autoflush=autoflush,
-                                   adaptive_capacity=adaptive_capacity)
+                                   adaptive_capacity=adaptive_capacity,
+                                   cluster=cluster)
+        elif cluster is not None:
+            raise ValueError("cluster= applies to the session-built store; "
+                             "pass a cluster store= object instead")
         self.net_bandwidth = net_bandwidth
         self.history = history
         self.run_hooks: List[Callable[[Any, EngineStats], None]] = []
@@ -310,6 +322,21 @@ class Session:
     @property
     def store_path(self) -> Optional[str]:
         return self.store.root if self.store.is_durable else None
+
+    # -- cluster passthrough (DESIGN §14) ------------------------------------
+    @property
+    def directory(self):
+        """The store's PartitionDirectory (None off-cluster)."""
+        return self.store.directory
+
+    def plan_rebalance(self, **kw):
+        """Plan an incremental placement change without applying it."""
+        return self.store.plan_rebalance(**kw)
+
+    def rebalance(self, plan=None, **kw):
+        """Apply (or plan-and-apply) a placement change; cached plans
+        against the old placement epoch invalidate automatically."""
+        return self.store.rebalance(plan=plan, **kw)
 
     # -- observability ---------------------------------------------------------
     def metrics(self) -> Dict[str, Any]:

@@ -31,6 +31,7 @@ lazily rehydrate, and a device-resident store prefetches host→device.
 from __future__ import annotations
 
 import itertools
+import os
 import threading
 import time
 from dataclasses import dataclass, field
@@ -224,7 +225,8 @@ class PartitionStore:
                  autoflush: bool = True,
                  write_log_cap: int = DEFAULT_WRITE_LOG_CAP,
                  adaptive_capacity: bool = False,
-                 capacity_threshold: float = 0.75):
+                 capacity_threshold: float = 0.75,
+                 cluster=None):
         from ..core.backends import resolve_backend
         # UnknownBackendError on typos; `registry` (default: the global
         # one) lets a Session thread its own registry through, so custom
@@ -278,11 +280,37 @@ class PartitionStore:
         self._last_access: Dict[str, int] = {}
         self._access_clock = itertools.count(1)
         self.durable = None
+        # cluster tier (DESIGN §14): health tracking + the rebalance path
+        # exist only when the durable tier is a ClusterDurableStore
+        self.health = None
+        if cluster is not None and root is None:
+            raise ValueError("cluster=ClusterConfig(...) needs root= "
+                             "(nodes are directories under the store root)")
         if root is not None:
             from .storage.durable import DurableStore
-            self.durable = DurableStore(
-                root, num_workers=num_workers,
-                max_retired_generations=max_retired_generations)
+            if cluster is not None or os.path.exists(
+                    os.path.join(root, "cluster.json")):
+                if memory_budget_bytes is not None:
+                    raise ValueError(
+                        "a cluster store does not support "
+                        "memory_budget_bytes: columns are reassembled "
+                        "in RAM from per-node parts and cannot be "
+                        "memmap-swapped to a single local segment")
+                from ..cluster.control import ClusterHealth
+                from ..cluster.node import ClusterDurableStore
+                self.durable = ClusterDurableStore(
+                    root, num_workers=num_workers,
+                    max_retired_generations=max_retired_generations,
+                    cluster=cluster)
+                # health watches the LIVE membership (directory epoch),
+                # not the bootstrap config; wired before _attach so the
+                # very first reads feed the straggler detector
+                self.health = ClusterHealth(self.durable.directory.nodes)
+                self.durable.health = self.health
+            else:
+                self.durable = DurableStore(
+                    root, num_workers=num_workers,
+                    max_retired_generations=max_retired_generations)
             # an existing catalog is authoritative for the worker count —
             # segment layouts are (m, capacity) and cannot be re-bucketed
             # on open without a shuffle
@@ -305,6 +333,46 @@ class PartitionStore:
     @property
     def root(self) -> Optional[str]:
         return self.durable.root if self.durable is not None else None
+
+    # -- cluster tier (DESIGN §14) -------------------------------------------
+    @property
+    def is_cluster(self) -> bool:
+        return getattr(self.durable, "is_cluster", False)
+
+    @property
+    def directory(self):
+        """Current :class:`~repro.cluster.directory.PartitionDirectory`
+        epoch (None on a non-cluster store)."""
+        return self.durable.directory if self.is_cluster else None
+
+    @property
+    def cluster_config(self):
+        return self.durable.cluster if self.is_cluster else None
+
+    @property
+    def placement_epoch(self) -> int:
+        """Placement generation the planner pins into PlanKeys: a
+        rebalance bumps it, invalidating exactly the plans compiled
+        against the old placement.  -1 on non-cluster stores (one value
+        for every single-host store, so their keys are unaffected)."""
+        return self.durable.directory.epoch if self.is_cluster else -1
+
+    def plan_rebalance(self, **kwargs):
+        """Plan (without applying) an incremental placement change —
+        see :meth:`repro.cluster.rebalancer.Rebalancer.plan`."""
+        from ..cluster.rebalancer import Rebalancer
+        return Rebalancer(self).plan(**kwargs)
+
+    def rebalance(self, plan=None, *, abort_after: Optional[int] = None,
+                  **kwargs):
+        """Apply a placement change: ``plan`` from :meth:`plan_rebalance`,
+        or plan-and-apply in one step (kwargs as for plan_rebalance).
+        Returns a :class:`~repro.cluster.rebalancer.RebalanceResult`."""
+        from ..cluster.rebalancer import Rebalancer
+        r = Rebalancer(self)
+        if plan is None:
+            plan = r.plan(**kwargs)
+        return r.apply(plan, abort_after=abort_after)
 
     def _attach(self) -> None:
         """Load every dataset's newest consistent generation as memmap
@@ -360,6 +428,20 @@ class PartitionStore:
             yield f"store_io_{k}", {}, float(v)
         yield "store_datasets", {}, float(len(self.datasets))
         yield "store_resident_bytes", {}, float(self.resident_bytes())
+        if self.is_cluster:
+            for k, v in self.durable.cluster_snapshot().items():
+                yield f"cluster_{k}", {}, float(v)
+            d = self.durable.directory
+            yield "cluster_epoch", {}, float(d.epoch)
+            yield "cluster_directory_lookups_total", {}, float(d.lookups)
+            yield "cluster_nodes", {}, float(len(d.nodes))
+            if self.health is not None:
+                yield ("cluster_heartbeat_misses_total", {},
+                       float(self.health.heartbeat_misses))
+                yield ("cluster_straggler_reissues_total", {},
+                       float(self.health.straggler_reissues))
+                yield ("cluster_nodes_alive", {},
+                       float(len(self.health.alive_nodes())))
 
     # -- test-only race instrumentation (DESIGN §11) -------------------------
     def set_sync_point(self, point: str,
@@ -383,7 +465,9 @@ class PartitionStore:
         with self._swap_lock:
             return self._install_locks.setdefault(name, threading.Lock())
 
-    def _install(self, name: str, ds: StoredDataset) -> StoredDataset:
+    def _install(self, name: str, ds: StoredDataset,
+                 persist: Optional[Callable[[StoredDataset], Any]] = None
+                 ) -> StoredDataset:
         """Atomically make ``ds`` the current generation of ``name``.
 
         The flip is a single dict assignment under the (global) swap lock;
@@ -394,14 +478,22 @@ class PartitionStore:
         runs ahead of a generation that fully exists.  The fsync-bound
         persist runs under a per-NAME lock only (it serializes the
         generation sequence of this dataset), so a slow background
-        repartition of one dataset never blocks writers of another."""
+        repartition of one dataset never blocks writers of another.
+
+        ``persist`` overrides the default durable publication for this
+        install (always invoked, regardless of autoflush) — the
+        Rebalancer passes one that republishes under a NEW placement
+        epoch, keeping the flip semantics identical for MVCC readers."""
         with _span("store.install", "store", dataset=name) as sp:
             with self._name_lock(name):
                 prev = self.datasets.get(name)
                 if prev is not None:
                     ds.generation = prev.generation + 1
                 if self.durable is not None:
-                    if self.autoflush:
+                    if persist is not None:
+                        persist(ds)
+                        self._dirty.discard(name)
+                    elif self.autoflush:
                         self.durable.persist(ds)
                         self._dirty.discard(name)
                     else:
@@ -490,8 +582,9 @@ class PartitionStore:
         """Evict ``name``'s current generation to its segment files: columns
         become read-only memmap views (bit-identical by construction).
         Persists first if the generation isn't durable yet.  Returns False
-        on a memory-only store."""
-        if self.durable is None:
+        on a memory-only store, and on a cluster store (assembled columns
+        span per-node parts — no single local segment to memmap)."""
+        if self.durable is None or self.is_cluster:
             return False
         # the per-name lock serializes spill against a concurrent _install
         # of the same dataset (the generation sequence stays linear); other

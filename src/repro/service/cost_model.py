@@ -199,6 +199,13 @@ class WhatIfCostModel:
         """Durable-tier transfer time for ``nbytes`` of segment data."""
         return nbytes / self.io_throughput()
 
+    def rebalance_seconds(self, moved_bytes: float) -> float:
+        """Modeled wall time of an incremental cluster rebalance (DESIGN
+        §14): the moved partitions' segment bytes stream node-to-node at
+        the calibrated segment-I/O throughput — unchanged parts are
+        hard-linked, so only the minimal move set is priced."""
+        return self.io_seconds(max(float(moved_bytes), 0.0))
+
     def padding_overhead_s(self, padded_bytes: float,
                            valid_bytes: float) -> float:
         """Per-run seconds a padded layout wastes moving padding (DESIGN

@@ -63,6 +63,18 @@ class AutopilotConfig:
     hot_key_fraction: float = 0.25
     skew_threshold: float = 2.0
     salt_factor: int = 4
+    # hottest-key share below which a salted layout is unwound (the split
+    # stops paying for its lost elisions once the key cools).  None →
+    # hot_key_fraction / 2: a deliberate gap between the salt and unsalt
+    # thresholds so a key oscillating around hot_key_fraction never
+    # flip-flops the layout.
+    unsalt_hot_key_fraction: Optional[float] = None
+    # -- cluster actions (DESIGN §14) ----------------------------------------
+    # None → follow the store (on iff the store is cluster-backed);
+    # True/False force.  When on, the tick drains the store's
+    # ClusterHealth signals (lost nodes, stragglers) and answers each with
+    # a priced rebalance decision.
+    cluster_actions: Optional[bool] = None
 
 
 @dataclass
@@ -70,14 +82,16 @@ class AppliedDecision:
     """One autonomous layout action: the advisor decision (None for a
     rebucket — no candidate changes), its what-if score, and what actually
     happened when it was applied."""
-    dataset: str
+    dataset: str                   # "*" for a store-wide rebalance
     decision: Optional[PartitioningDecision]
     score: LayoutScore
     generation: int                # generation published by the swap
+                                   # (directory epoch for a rebalance)
     moved_bytes: int
     repartition_wall_s: float
-    path: str                      # "d2d" | "host" | "rebucket"
-    kind: str = "repartition"      # "repartition" | "salt" | "rebucket"
+    path: str                      # "d2d" | "host" | "rebucket" | "rebalance"
+    kind: str = "repartition"      # "repartition" | "salt" | "unsalt" |
+                                   # "rebucket" | "rebalance"
 
 
 @dataclass
@@ -133,6 +147,107 @@ class StorageOptimizer:
         if self.cfg.skew_actions is not None:
             return bool(self.cfg.skew_actions)
         return bool(getattr(self.store, "adaptive_capacity", False))
+
+    # -- cluster actions: health signals → rebalance decisions (DESIGN §14) --
+    def _cluster_enabled(self) -> bool:
+        if self.cfg.cluster_actions is not None:
+            return bool(self.cfg.cluster_actions)
+        return bool(getattr(self.store, "is_cluster", False))
+
+    def _window_run_rate(self, now: float) -> float:
+        """Weight-aware observed runs inside the recency window, across
+        every consumer — the rate a store-wide degradation is paid at."""
+        return sum(r.weight for r in self.history.records
+                   if r.timestamp >= now - self.cfg.window_s)
+
+    def _consider_cluster(self, now: float, report: TickReport):
+        """Drain the store's ClusterHealth signals and answer each with a
+        priced rebalance consideration.  At most one rebalance queues per
+        tick (applying one bumps the placement epoch, which would stale
+        any plan built alongside it); every signal still gets its own
+        why-record.  Returns the queued ``("rebalance", "*", plan,
+        score)`` or None."""
+        health = getattr(self.store, "health", None)
+        if health is None:
+            return None
+        queued = None
+        for sig in health.signals():
+            directory = self.store.directory
+            node, nodes = sig.node, directory.nodes
+            survivors = [n for n in nodes if n != node]
+            candidate = f"remove:{node}"
+            gates = [
+                self._gate("node_in_membership", node in nodes, node=node),
+                self._gate("surviving_nodes", len(survivors) >= 1,
+                           observed=len(survivors), required=1),
+                self._gate("single_rebalance_per_tick", queued is None),
+            ]
+            if not all(g["passed"] for g in gates):
+                self._why(report, "*", f"rebalance:{sig.kind}", candidate,
+                          None, gates, False)
+                continue
+            plan = self.store.plan_rebalance(
+                remove_nodes=(node,), reason=f"{sig.kind}:{node}")
+            cost_s = self.cost_model.rebalance_seconds(plan.est_bytes_moved)
+            runs = self._window_run_rate(now)
+            if sig.kind == "node_lost":
+                # until the displaced partitions re-home, every run reads
+                # them degraded off replicas and the store sits one more
+                # failure from data loss — each windowed run is priced as
+                # re-paying the displaced bytes' transfer
+                benefit_s = max(runs, 1.0) * cost_s
+            else:   # straggler: runs keep paying the node's excess latency
+                benefit_s = runs * float(sig.detail.get("excess_s", 0.0))
+            score = LayoutScore(
+                dataset="*", candidate_signature=candidate,
+                benefit_s=benefit_s, repartition_s=0.0,
+                runs_in_window=runs, shuffles_delta=0.0, io_s=cost_s)
+            report.considered.append(("*", candidate, score))
+            gates.append(self._gate(
+                "mesh_replan", not plan.mesh_error,
+                error=plan.mesh_error,
+                mesh=str(plan.mesh.shape) if plan.mesh else ""))
+            if sig.kind == "node_lost":
+                # replication must be restored — a lost node is priced for
+                # the record but never benefit-gated
+                gates.append(self._gate("replication_at_risk", True,
+                                        missed=sig.detail.get("missed", 0.0)))
+            else:
+                gates.append(self._gate(
+                    "worth_it", score.worth_it(self.cfg.hysteresis,
+                                               self.cfg.horizon_windows)))
+            accepted = all(g["passed"] for g in gates)
+            self._why(report, "*", f"rebalance:{sig.kind}", candidate, score,
+                      gates, accepted)
+            if accepted:
+                queued = ("rebalance", "*", plan, score)
+        return queued
+
+    def _apply_rebalance(self, plan, score: LayoutScore, report: TickReport,
+                         now: float) -> None:
+        """Apply a queued rebalance plan: stream the minimal move set and
+        commit the new placement epoch (one atomic pointer flip per
+        dataset, then the EPOCH pointer)."""
+        with _span("autopilot.apply", "autopilot", dataset="*",
+                   kind="rebalance") as asp:
+            try:
+                res = self.store.rebalance(plan=plan)
+            except ValueError as e:    # plan went stale under our feet
+                asp.set(skipped=str(e))
+                return
+            streamed = res.bytes_moved + res.replica_bytes
+            if streamed > 0 and res.wall_s > 0:
+                self.cost_model.observe_io(streamed, res.wall_s)
+            applied = AppliedDecision(
+                dataset="*", decision=None, score=score,
+                generation=res.epoch, moved_bytes=res.bytes_moved,
+                repartition_wall_s=res.wall_s, path="rebalance",
+                kind="rebalance")
+            asp.set(epoch=res.epoch, moved_bytes=int(res.bytes_moved),
+                    partitions_moved=int(res.partitions_moved),
+                    bytes_linked=int(res.bytes_linked))
+            report.applied.append(applied)
+            self._catalog_log(applied, now)
 
     # -- decision explainability (DESIGN §13) --------------------------------
     @staticmethod
@@ -244,6 +359,45 @@ class StorageOptimizer:
                         consumers=[], action_index=-1, state=None,
                         elapsed_s=0.0)
                     return ("salt", name, decision, score)
+        # -- hot-key cooling: unwind a salted layout --------------------------
+        elif base is not None and "salt" in cur_sig:
+            hot = self._observed_hot_fraction(cands, now)
+            unsalt_thr = (self.cfg.unsalt_hot_key_fraction
+                          if self.cfg.unsalt_hot_key_fraction is not None
+                          else self.cfg.hot_key_fraction / 2.0)
+            gates = [self._gate("hot_key_cooled", hot < unsalt_thr,
+                                observed=hot, required=unsalt_thr)]
+            if not all(g["passed"] for g in gates):
+                self._why(report, name, "unsalt", "", None, gates, False)
+            else:
+                # the cooled key no longer needs the split; the plain keyed
+                # layout matches Alg. 4 again, so its restored elisions are
+                # the benefit side — no padding term (a cooled key fills
+                # partitions evenly under either layout)
+                score = self.cost_model.score(
+                    name, float(ds.nbytes), ds.num_workers, base,
+                    ds.partitioner, self.history, now=now,
+                    window_s=self.cfg.window_s, groups=groups,
+                    durable=self.store.is_durable and self.store.autoflush,
+                    source_spilled=self.store.is_durable
+                    and self.store.is_spilled(name))
+                report.considered.append((name, base.signature(), score))
+                gates.append(self._gate(
+                    "min_runs", score.runs_in_window >= self.cfg.min_runs,
+                    observed=score.runs_in_window,
+                    required=self.cfg.min_runs))
+                gates.append(self._gate(
+                    "worth_it", score.worth_it(self.cfg.hysteresis,
+                                               self.cfg.horizon_windows)))
+                accepted = all(g["passed"] for g in gates)
+                self._why(report, name, "unsalt", base.signature(), score,
+                          gates, accepted)
+                if accepted:
+                    decision = PartitioningDecision(
+                        dataset=name, candidate=base, features=[],
+                        consumers=[], action_index=-1, state=None,
+                        elapsed_s=0.0)
+                    return ("unsalt", name, decision, score)
         # -- capacity rebucketing ---------------------------------------------
         if ds.partitioner is None:
             return None
@@ -323,6 +477,12 @@ class StorageOptimizer:
         # one O(records²) skeleton build per tick, shared by every dataset's
         # enumeration and what-if score
         groups, _ = self.history.skeleton_graph()
+        # cluster phase first: a queued rebalance applies before any
+        # per-dataset swap, so those swaps persist against the new placement
+        if self._cluster_enabled():
+            cluster = self._consider_cluster(now, report)
+            if cluster is not None:
+                to_apply.append(cluster)
         for name in sorted(self.store.datasets):
             if self.cfg.datasets is not None and name not in self.cfg.datasets:
                 continue
@@ -332,7 +492,13 @@ class StorageOptimizer:
             ds = self.store.read(name)
             cands, cand_groups, rel_groups = self._enumerate(name, groups)
             queued = False
-            if cands:
+            # a salted dataset under active skew management is owned by the
+            # skew phase: unwinding the split must clear the hot_key_cooled
+            # gate, or the generic phase would flip a still-hot key straight
+            # back to the keyed layout it just split away from
+            salted_now = ds.partitioner is not None and \
+                "salt" in ds.partitioner.signature()
+            if cands and not (salted_now and self._skew_enabled()):
                 # policy pick (greedy Eq. 2 / DRL — one interface)
                 t0 = time.perf_counter()
                 feats = [candidate_features(c,
@@ -408,13 +574,16 @@ class StorageOptimizer:
                     "records": report.why})
 
         for kind, name, decision, score in to_apply:
+            if kind == "rebalance":   # store-wide: no single dataset to read
+                self._apply_rebalance(decision, score, report, now)
+                continue
             # apply: materialize off to the side, atomically flip (swap)
             with _span("autopilot.apply", "autopilot", dataset=name,
                        kind=kind) as asp:
                 ds_bytes = float(self.store.read(name).nbytes)
                 io0 = self.store.io_snapshot()
                 t1 = time.perf_counter()
-                if kind == "repartition":
+                if kind in ("repartition", "unsalt"):
                     new, moved = apply_decision(self.store, decision,
                                                 mesh=self.mesh)
                 elif kind == "salt":

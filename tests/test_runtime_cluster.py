@@ -1,0 +1,187 @@
+"""Unit tests for the runtime modules the cluster tier wires up
+(DESIGN §14): mesh replanning under node loss/gain
+(:mod:`repro.runtime.elastic`), deterministic p50-window straggler
+detection (:mod:`repro.runtime.straggler`), and the ClusterHealth
+control plane built over the Coordinator heartbeats
+(:mod:`repro.runtime.fault_tolerance`).  Everything runs with logical
+clocks and injected latencies — no sleeps, no real nodes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster.control import (STRAGGLER_SIGNAL_DETECTIONS,
+                                   ClusterHealth)
+from repro.runtime.elastic import MeshPlan, replan_mesh, resharding_plan
+from repro.runtime.fault_tolerance import Coordinator, RunState
+from repro.runtime.straggler import StragglerConfig, StragglerMitigator
+
+
+# ---------------------------------------------------------------------------
+# elastic: mesh replanning
+# ---------------------------------------------------------------------------
+
+def test_replan_shrinks_data_axis_to_power_of_two():
+    cur = MeshPlan((8, 2), ("data", "model"))
+    assert cur.num_devices == 16
+    new = replan_mesh(cur, 12)           # 4 devices lost
+    assert new.shape == (4, 2)           # data 8 → 4 (largest pow2 ≤ 6)
+    assert new.axes == ("data", "model")
+
+
+def test_replan_grows_back_along_same_path():
+    cur = MeshPlan((2, 2), ("data", "model"))
+    assert replan_mesh(cur, 16).shape == (8, 2)
+
+
+def test_replan_exact_fit_and_single_device():
+    assert replan_mesh(MeshPlan((4, 1), ("data", "model")), 4).shape == (4, 1)
+    assert replan_mesh(MeshPlan((4, 1), ("data", "model")), 1).shape == (1, 1)
+
+
+def test_replan_fewer_devices_than_model_axis_raises():
+    cur = MeshPlan((2, 4), ("data", "model"))
+    with pytest.raises(ValueError, match="fewer surviving devices"):
+        replan_mesh(cur, 3)              # model axis needs 4
+
+
+def test_replan_collapses_degraded_pod_axis():
+    cur = MeshPlan((2, 4, 2), ("pod", "data", "model"))
+    new = replan_mesh(cur, 8)
+    assert new.shape == (1, 4, 2)        # pod collapses into data
+    assert new.axes == ("pod", "data", "model")
+
+
+def test_resharding_plan_covers_every_row_once():
+    old = MeshPlan((4, 1), ("data", "model"))
+    new = replan_mesh(old, 2)            # data 4 → 2
+    plan = resharding_plan(old, new, batch_dim=64)
+    assert plan["per_device_batch"] == 32
+    rows = []
+    for a in plan["assignments"]:
+        lo, hi = a["rows"]
+        rows.extend(range(lo, hi))
+        # each new shard reads only old shards that actually held its rows
+        assert a["reads_old_shards"] == sorted(
+            {r // (64 // 4) for r in range(lo, hi)})
+    assert rows == list(range(64))
+
+
+# ---------------------------------------------------------------------------
+# straggler: deterministic p50-window detection
+# ---------------------------------------------------------------------------
+
+def test_threshold_needs_min_samples():
+    mit = StragglerMitigator(StragglerConfig(min_samples=4))
+    for _ in range(3):
+        mit.record(0.01)
+    assert mit.threshold() is None
+    mit.record(0.01)
+    assert mit.threshold() == pytest.approx(0.02)      # factor 2 × p50
+
+
+def test_fetch_shard_reissues_on_injected_latency():
+    mit = StragglerMitigator(StragglerConfig(min_samples=4, factor=2.0))
+    calls = []
+
+    def fetch(step, host):
+        calls.append((step, host))
+        return {"host": host}
+
+    for step in range(4):                # establish the p50 ≈ 0.01 window
+        mit.fetch_shard(fetch, step, host=0, backup_host=1,
+                        simulated_latency=0.01)
+    assert mit.reissues == 0
+    shard = mit.fetch_shard(fetch, 4, host=0, backup_host=1,
+                            simulated_latency=1.0)
+    assert shard == {"host": 0}          # deterministic duplicate
+    assert mit.reissues == 1
+    assert calls.count((4, 0)) == 2      # reissued the same (step, host)
+    assert mit.detections[-1] == (4, 0, 1.0)
+
+
+def test_window_slides_so_old_slowness_ages_out():
+    mit = StragglerMitigator(StragglerConfig(window=8, min_samples=4))
+    for _ in range(8):
+        mit.record(1.0)                  # a slow era
+    assert mit.threshold() == pytest.approx(2.0)
+    for _ in range(8):
+        mit.record(0.01)                 # fast era displaces the window
+    assert mit.threshold() == pytest.approx(0.02)
+
+
+# ---------------------------------------------------------------------------
+# ClusterHealth: heartbeats → node_lost, reads → straggler signals
+# ---------------------------------------------------------------------------
+
+def test_health_declares_silent_node_lost_once():
+    h = ClusterHealth(("a", "b"), miss_threshold=3)
+    sigs = []
+    for step in range(1, 6):
+        h.heartbeat("a", step)
+        sigs += h.tick(step)
+    assert [s.kind for s in sigs] == ["node_lost"]
+    assert sigs[0].node == "b" and sigs[0].step == 3
+    assert h.alive_nodes() == ["a"] and h.dead_nodes() == ["b"]
+    assert h.heartbeat_misses >= 3
+    # dedupe: the same (kind, node) never signals twice
+    assert h.tick(6) == [] and h.signals() == [sigs[0]]
+    # membership reset (post-rebalance) starts a fresh epoch of health
+    h.reset_nodes(("a",))
+    for step in range(1, 5):
+        h.heartbeat("a", step)
+        assert h.tick(step) == []
+    assert h.dead_nodes() == []
+
+
+def test_health_heartbeat_keeps_node_alive():
+    h = ClusterHealth(("a", "b"), miss_threshold=2)
+    for step in range(1, 10):
+        h.heartbeat("a", step)
+        h.heartbeat("b", step)
+        assert h.tick(step) == []
+    assert h.dead_nodes() == []
+    h.heartbeat("nonexistent", 99)       # unknown nodes are ignored
+
+
+def test_health_straggler_signal_after_repeated_detections():
+    cfg = StragglerConfig(min_samples=4, factor=2.0)
+    h = ClusterHealth(("a", "b", "c"), straggler=cfg)
+    for _ in range(4):                   # fast baseline fills the window
+        for n in ("a", "b", "c"):
+            assert h.record_read(n, 0.01) is False
+    sigs = []
+    for i in range(STRAGGLER_SIGNAL_DETECTIONS):
+        assert h.record_read("b", 1.0) is True     # cue to hit a replica
+        sigs += h.signals()
+    assert h.straggler_reissues == STRAGGLER_SIGNAL_DETECTIONS
+    assert [s.kind for s in sigs] == ["straggler"]
+    assert sigs[0].node == "b"
+    assert sigs[0].detail["latency_s"] == pytest.approx(1.0)
+    assert sigs[0].detail["detections"] == STRAGGLER_SIGNAL_DETECTIONS
+    assert h.straggler_excess_s("b") > 0.3   # mean of b's window − p50
+    assert h.straggler_excess_s("a") == pytest.approx(0.0, abs=1e-6)
+
+
+def test_health_latency_injector_overrides_measured():
+    h = ClusterHealth(("a",))
+    h.set_read_latency(lambda node: 0.25)
+    assert h.observed_latency("a", 99.0) == 0.25
+    h.set_read_latency(lambda node: None)      # injector declines
+    assert h.observed_latency("a", 0.5) == 0.5
+    h.set_read_latency(None)
+    assert h.observed_latency("a", 0.75) == 0.75
+
+
+def test_coordinator_backoff_and_state_machine():
+    c = Coordinator(2, miss_threshold=1, max_restarts=1)
+    assert c.state == RunState.RUNNING
+    ev = c.tick(1, checkpoint_step=0)
+    assert ev is not None and c.state == RunState.RECOVERING
+    assert c.backoff_s() == pytest.approx(0.1)
+    c.recover()
+    assert c.state == RunState.RUNNING
+    ev2 = c.tick(2, checkpoint_step=1)   # second failure exceeds budget
+    assert ev2 is not None and ev2.restart_step == 1
+    assert c.state == RunState.FAILED
+    assert c.backoff_s() == pytest.approx(0.2)

@@ -458,3 +458,68 @@ def test_skew_actions_default_follows_store_flag():
     rep2 = ap.tick()
     # skew_actions=None + non-adaptive store ⇒ no salt/rebucket ever
     assert all(a.kind == "repartition" for a in rep2.applied)
+
+
+def test_autopilot_unsalts_cooled_hot_key():
+    """Salt → cool → unsalt round-trips bit-identically (PR 7 leftover).
+
+    While the key is hot, nothing may unwind the split — the skew phase
+    owns salted layouts and its hot_key_cooled gate holds.  Once the
+    observed hot-key share drops below the unsalt threshold (default
+    hot_key_fraction/2), the plain keyed layout comes back, consumers
+    elide again, and results match the salted era bit-for-bit."""
+    store, sess, ap = _skewed_session(window_s=6.0)
+    wl = q_orderkey()
+    for _ in range(3):
+        sess.run(wl)
+    ap.cost_model.observe_shuffle(1e9, 0.1)
+    ap.cost_model.observe_io(1e6, 1.0)
+    ap.tick()                               # keyed repartition
+    ap.tick()                               # hot-key salt
+    assert "salt" in store.read("lineitem").partitioner.signature()
+
+    # still hot: a fat repartition calibration makes unwinding cheap, but
+    # the hot_key_cooled gate must keep the split in place (no flip-flop)
+    ap.cost_model.observe_repartition(1e9, 0.1)
+    rep_hot = ap.tick()
+    assert not any(a.kind in ("unsalt", "repartition") and
+                   a.dataset == "lineitem" for a in rep_hot.applied)
+    assert "salt" in store.read("lineitem").partitioner.signature()
+    w = next(r for r in rep_hot.why
+             if r["dataset"] == "lineitem" and r["action"] == "unsalt")
+    assert not w["accepted"]
+    assert not next(g for g in w["gates"]
+                    if g["gate"] == "hot_key_cooled")["passed"]
+
+    # the key cools: same schema, uniform orderkeys, salted layout kept
+    cooled = drift_tables(n_lineitem=4000, skew=0.0, seed=1)
+    store.write("lineitem", cooled["lineitem"],
+                partitioner=store.read("lineitem").partitioner)
+    ref_vals, ref_stats = sess.run(wl)      # salted era: shuffles paid
+    assert ref_stats.shuffles_performed >= 1
+    ref = aggregate_result(ref_vals, wl)
+    for _ in range(6):                      # hot records age out of window
+        sess.run(wl)
+
+    rep = ap.tick()
+    a = next(x for x in rep.applied if x.kind == "unsalt")
+    assert a.dataset == "lineitem" and a.decision is not None
+    assert "salt" not in a.decision.candidate.signature()
+    ds = store.read("lineitem")
+    assert ds.partitioner.signature() == ORDERKEY_SIG
+    w = next(r for r in rep.why
+             if r["dataset"] == "lineitem" and r["action"] == "unsalt")
+    assert w["accepted"]
+    assert next(g for g in w["gates"]
+                if g["gate"] == "hot_key_cooled")["passed"]
+
+    # round trip: the keyed layout matches Alg. 4 again and the results
+    # are bit-identical to the salted era
+    vals, stats = sess.run(wl)
+    assert stats.shuffles_elided >= 1
+    got = aggregate_result(vals, wl)
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+    # stable: the next tick neither re-salts nor re-unsalts
+    rep2 = ap.tick()
+    assert not any(x.kind in ("salt", "unsalt") for x in rep2.applied)
