@@ -1,0 +1,110 @@
+"""Diff a fresh benchmark JSON against the previous snapshot (DESIGN §15).
+
+    python scripts/bench_diff.py BENCH_fresh.json [BENCH_baseline.json]
+                                 [--tolerance 1.25] [--strict]
+
+With no explicit baseline the newest committed ``BENCH_*.json`` in the
+repo root (by mtime, excluding the fresh file itself) is used.  Rows are
+matched by ``name``; for each shared row the ratio
+``fresh.us_per_call / baseline.us_per_call`` is printed, with rows past
+the tolerance flagged ``REGRESSED`` (slower) / ``improved`` (faster).
+
+This is a REPORT, not a gate: CI machines are noisy and the committed
+snapshots come from different hardware, so the exit code is 0 no matter
+what the diff says — unless ``--strict`` is passed (exit 1 on any
+flagged regression), which is for local before/after comparisons on one
+machine.  The durable, per-machine regression gate is the
+RegressionDetector over the telemetry history (src/repro/obs/watchdog.py),
+not this script.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_rows(path: str):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for row in doc.get("rows", []):
+        name, us = row.get("name"), row.get("us_per_call")
+        if name and isinstance(us, (int, float)) and us > 0:
+            rows[name] = float(us)
+    return rows, doc
+
+
+def newest_baseline(repo_root: str, exclude: str):
+    cands = [p for p in glob.glob(os.path.join(repo_root, "BENCH_*.json"))
+             if os.path.abspath(p) != os.path.abspath(exclude)]
+    return max(cands, key=os.path.getmtime) if cands else None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json snapshots by row")
+    ap.add_argument("fresh", help="the just-produced bench JSON")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="snapshot to compare against (default: newest "
+                         "BENCH_*.json in the repo root)")
+    ap.add_argument("--tolerance", type=float, default=1.25,
+                    help="flag rows slower/faster than this ratio "
+                         "(default 1.25)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any row regressed past tolerance")
+    args = ap.parse_args(argv)
+    if args.tolerance <= 1.0:
+        ap.error("--tolerance must be > 1.0")
+
+    baseline = args.baseline or newest_baseline(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        args.fresh)
+    if baseline is None:
+        print("bench diff: no previous BENCH_*.json to compare against "
+              "— skipping")
+        return 0
+    fresh_rows, fresh_doc = load_rows(args.fresh)
+    base_rows, _ = load_rows(baseline)
+
+    shared = sorted(set(fresh_rows) & set(base_rows))
+    only_fresh = sorted(set(fresh_rows) - set(base_rows))
+    only_base = sorted(set(base_rows) - set(fresh_rows))
+    print(f"bench diff: {os.path.basename(args.fresh)} vs "
+          f"{os.path.basename(baseline)} "
+          f"({len(shared)} shared rows, tolerance {args.tolerance:g}x)")
+
+    regressed = 0
+    width = max((len(n) for n in shared), default=4)
+    for name in shared:
+        b, f = base_rows[name], fresh_rows[name]
+        ratio = f / b
+        flag = ""
+        if ratio > args.tolerance:
+            flag = "  REGRESSED"
+            regressed += 1
+        elif ratio < 1.0 / args.tolerance:
+            flag = "  improved"
+        print(f"  {name:<{width}}  {b:>12.1f} -> {f:>12.1f} us "
+              f"({ratio:>5.2f}x){flag}")
+    for name in only_fresh:
+        print(f"  {name:<{width}}  (new row: {fresh_rows[name]:.1f} us)")
+    for name in only_base:
+        print(f"  {name:<{width}}  (row dropped from fresh run)")
+    if fresh_doc.get("failures"):
+        print(f"  NOTE: fresh run reported failures: "
+              f"{fresh_doc['failures']}")
+
+    if regressed:
+        print(f"bench diff: {regressed} row(s) past tolerance "
+              f"{'(strict: failing)' if args.strict else '(advisory only)'}")
+    else:
+        print("bench diff: no regressions past tolerance")
+    return 1 if (regressed and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -100,4 +100,10 @@ if [[ "$RUN_BENCH" == 1 ]]; then
     JAX_PLATFORMS=cpu LACHESIS_BENCH_SMOKE=1 \
         PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m benchmarks.run --json "$BENCH_JSON"
+
+    # advisory diff vs the newest committed snapshot (DESIGN §15) —
+    # never gates: CI noise + cross-machine snapshots make hard limits
+    # meaningless here; the per-machine gate is the telemetry watchdog
+    echo "== bench diff (advisory)"
+    python scripts/bench_diff.py "$BENCH_JSON" || true
 fi

@@ -48,6 +48,7 @@ from .data.partition_store import PartitionStore, StoredDataset
 from .obs import metrics as _obs_metrics
 from .obs import tracer as _obs_tracer
 from .obs.export import to_chrome_trace, write_chrome_trace
+from .obs.telemetry import RunProfile
 
 __all__ = ["Session", "RunResult", "UnknownBackendError", "StalePlanError"]
 
@@ -149,6 +150,9 @@ class Session:
         self.executor = Executor(store, interpret=interpret)
         self._current: Optional[Workload] = None
         self._wl_counter = 0
+        # last-seen device trace counter, for per-run retrace deltas in
+        # the telemetry RunProfile (lazy: first durable run initializes)
+        self._traces_seen: Optional[int] = None
         # facades attached via autopilot()/serve(), weakly held: the
         # explain_decisions()/export_trace() surfaces read through them
         self._autopilots: List[Any] = []
@@ -271,9 +275,46 @@ class Session:
                 timestamp=timestamp)
             sp.set(cache_hit=stats.plan_cache_hit,
                    wall_ms=round(stats.wall_s * 1e3, 3))
+        if getattr(self.store, "telemetry", None) is not None:
+            self._record_run_profile(wl, stats, plan)
         if workload is None and wl is self._current:
             self._current = None
         return RunResult(values=vals, stats=stats, plan=plan, workload=wl)
+
+    def _record_run_profile(self, wl: Workload, stats: EngineStats,
+                            plan: PhysicalPlan) -> None:
+        """Append one RunProfile to the store's durable telemetry
+        (DESIGN §15) — the (state, action, reward) record per run."""
+        import time as _time
+        from .data.device_repartition import plan_cache_stats as dev_stats
+        traces = int(dev_stats().get("traces", 0))
+        prev = self._traces_seen
+        self._traces_seen = traces
+        key = getattr(plan, "key", None)
+        generations = {name: int(gen)
+                       for name, gen, _sig in getattr(key, "layout", ())}
+        profile = RunProfile(
+            t=_time.time(), workload=getattr(wl, "app_id", ""),
+            process=_obs_tracer.TRACER.process,
+            wall_s=float(stats.wall_s), shuffle_s=float(stats.shuffle_s),
+            io_s=float(stats.storage_io_s),
+            planning_s=float(stats.planning_s),
+            plan_cache_hit=bool(stats.plan_cache_hit),
+            retraces=traces - prev if prev is not None else 0,
+            shuffles_performed=int(stats.shuffles_performed),
+            shuffles_elided=int(stats.shuffles_elided),
+            shuffle_bytes=int(stats.shuffle_bytes),
+            input_bytes=int(stats.input_bytes),
+            output_bytes=int(stats.output_bytes),
+            io_bytes=int(stats.storage_io_bytes),
+            padded_bytes=int(stats.padded_bytes),
+            valid_bytes=int(stats.valid_bytes),
+            placement_epoch=int(getattr(key, "placement_epoch", -1)),
+            generations=generations)
+        try:
+            self.store.telemetry.record_run(profile)
+        except OSError:          # telemetry is advisory — a full disk
+            pass                 # must never fail the run that produced it
 
     def add_run_hook(self, fn: Callable[[Any, EngineStats], None]) -> None:
         """Register ``fn(workload, stats)`` to fire after every run (the
@@ -360,6 +401,50 @@ class Session:
             return write_chrome_trace(path, metadata=meta)
         return to_chrome_trace(metadata=meta)
 
+    def telemetry(self, limit: Optional[int] = None) -> List[RunProfile]:
+        """Per-run :class:`RunProfile` records from the store's durable
+        telemetry history (DESIGN §15), oldest first — these survive
+        process restarts because they live under the store root.  Empty
+        without ``store_path``."""
+        tele = getattr(self.store, "telemetry", None)
+        if tele is None:
+            return []
+        return tele.run_profiles(limit=limit)
+
+    @property
+    def telemetry_store(self):
+        """The underlying TelemetryStore (None without ``store_path``)."""
+        return getattr(self.store, "telemetry", None)
+
+    @property
+    def watchdog(self):
+        """The store's RegressionDetector (None without ``store_path``)."""
+        return getattr(self.store, "watchdog", None)
+
+    def export_node_metrics(self, node: Optional[str] = None) -> Optional[str]:
+        """Snapshot this process's metrics registry to the store's
+        ``telemetry/metrics-<node>.json`` (default node label: the
+        tracer's process label) for the cluster-wide merged view.
+        Returns the path, or None without a durable store."""
+        tele = getattr(self.store, "telemetry", None)
+        if tele is None:
+            return None
+        return tele.write_node_metrics(self.metrics_registry,
+                                       node or _obs_tracer.TRACER.process)
+
+    def cluster_metrics(self) -> Dict[str, Any]:
+        """Merged metrics snapshot over every node's exported
+        ``metrics-*.json`` — one document, ``node`` label per sample."""
+        tele = getattr(self.store, "telemetry", None)
+        if tele is None:
+            return {"version": _obs_metrics.METRICS_SCHEMA_VERSION,
+                    "nodes": [], "metrics": {}}
+        return tele.cluster_metrics()
+
+    def cluster_metrics_text(self) -> str:
+        """The merged cluster view as Prometheus text exposition."""
+        return _obs_metrics.snapshot_prometheus_text(self.cluster_metrics())
+
     def explain_decisions(self, limit: int = 50) -> List[Dict[str, Any]]:
         """Structured why-records for the Autopilot's recent decisions:
         every candidate's priced score and which gate (hysteresis,
@@ -426,6 +511,12 @@ class _ProcessCollectors:
         st = _obs_tracer.TRACER.stats()
         yield "tracer_spans_buffered", {}, st["buffered"]
         yield "tracer_spans_dropped_total", {}, st["dropped"]
+        # canonical names (DESIGN §15): ring-buffer loss + current mode,
+        # so silent span drops and "why is my trace empty" (mode=off)
+        # are both answerable from session.metrics() alone
+        yield "trace_spans_dropped_total", {}, st["dropped"]
+        mode_code = {"off": 0, "sampled": 1, "full": 2}.get(st["mode"], -1)
+        yield "trace_mode", {"mode": st["mode"]}, mode_code
 
 
 def _register_process_collectors(

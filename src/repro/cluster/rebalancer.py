@@ -162,11 +162,16 @@ class Rebalancer:
 
     # -- application ---------------------------------------------------------
     def apply(self, plan: RebalancePlan,
-              abort_after: Optional[int] = None) -> RebalanceResult:
+              abort_after: Optional[int] = None,
+              on_abort=None) -> RebalanceResult:
         """Execute ``plan``: republish every dataset under the new
         placement (atomic per-dataset pointer flips), then commit the
         epoch.  ``abort_after=N`` (tests/smoke only) raises after N
-        datasets, simulating a crash before the epoch commit."""
+        datasets, simulating a crash before the epoch commit;
+        ``on_abort`` (a callable) runs at the crash point *while the
+        ``cluster.rebalance`` span is still open* — the smoke uses it to
+        spill the trace buffer exactly as a dying process would, so the
+        in-flight span reaches the merged trace as ``incomplete``."""
         store, durable = self.store, self.store.durable
         if plan.old_epoch != store.directory.epoch:
             raise ValueError(
@@ -195,6 +200,8 @@ class Rebalancer:
                 generations[name] = new.generation
                 done += 1
                 if abort_after is not None and done >= abort_after:
+                    if on_abort is not None:
+                        on_abort()
                     raise RebalanceAborted(
                         f"simulated crash after {done} dataset(s), "
                         "before epoch commit")

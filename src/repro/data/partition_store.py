@@ -283,6 +283,10 @@ class PartitionStore:
         # cluster tier (DESIGN §14): health tracking + the rebalance path
         # exist only when the durable tier is a ClusterDurableStore
         self.health = None
+        # durable-only observability (DESIGN §15): per-run telemetry
+        # history and the regression watchdog reading it
+        self.telemetry = None
+        self.watchdog = None
         if cluster is not None and root is None:
             raise ValueError("cluster=ClusterConfig(...) needs root= "
                              "(nodes are directories under the store root)")
@@ -316,6 +320,13 @@ class PartitionStore:
             # on open without a shuffle
             if self.durable.num_workers is not None:
                 num_workers = self.durable.num_workers
+            # durable telemetry history + regression watchdog (DESIGN
+            # §15) live under the same root, so profiles and baselines
+            # survive restarts with the data they describe
+            from ..obs.telemetry import TelemetryStore
+            from ..obs.watchdog import RegressionDetector
+            self.telemetry = TelemetryStore(root)
+            self.watchdog = RegressionDetector(self.telemetry)
             self._attach()
         self.m = num_workers
 
@@ -364,7 +375,7 @@ class PartitionStore:
         return Rebalancer(self).plan(**kwargs)
 
     def rebalance(self, plan=None, *, abort_after: Optional[int] = None,
-                  **kwargs):
+                  on_abort=None, **kwargs):
         """Apply a placement change: ``plan`` from :meth:`plan_rebalance`,
         or plan-and-apply in one step (kwargs as for plan_rebalance).
         Returns a :class:`~repro.cluster.rebalancer.RebalanceResult`."""
@@ -372,7 +383,7 @@ class PartitionStore:
         r = Rebalancer(self)
         if plan is None:
             plan = r.plan(**kwargs)
-        return r.apply(plan, abort_after=abort_after)
+        return r.apply(plan, abort_after=abort_after, on_abort=on_abort)
 
     def _attach(self) -> None:
         """Load every dataset's newest consistent generation as memmap
@@ -420,6 +431,10 @@ class PartitionStore:
             return
         regs.add(marker)
         registry.register_callback(self, PartitionStore._metric_samples)
+        # the watchdog's coalesce-rate series reads serving counters out
+        # of whichever registry the session exports through
+        if self.watchdog is not None and self.watchdog.registry is None:
+            self.watchdog.registry = registry
 
     def _metric_samples(self):
         for k, v in self.write_stats().items():
@@ -428,6 +443,15 @@ class PartitionStore:
             yield f"store_io_{k}", {}, float(v)
         yield "store_datasets", {}, float(len(self.datasets))
         yield "store_resident_bytes", {}, float(self.resident_bytes())
+        if self.telemetry is not None:
+            st = self.telemetry.stats()
+            yield "telemetry_records", {}, float(st["records"])
+            yield "telemetry_appends_total", {}, float(st["appends"])
+            yield "telemetry_compactions_total", {}, float(st["compactions"])
+        if self.watchdog is not None:
+            yield ("watchdog_perf_regressions_total", {},
+                   float(self.watchdog.raised_total))
+            yield "watchdog_checks_total", {}, float(self.watchdog.checks)
         if self.is_cluster:
             for k, v in self.durable.cluster_snapshot().items():
                 yield f"cluster_{k}", {}, float(v)

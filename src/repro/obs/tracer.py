@@ -25,19 +25,39 @@ captures ``tracer.context()`` and the worker runs inside
 span across the pool boundary, and the exporter draws the handoff as a
 Chrome flow arrow.  The serving tier (submit → ticket worker) and the
 Autopilot (facade → optimizer thread ticks) both use this.
+
+Cross-*process* parenting (DESIGN §15) works the same way, one
+serialization step removed: :meth:`TraceContext.to_wire` /
+:meth:`TraceContext.from_wire` move a context through any dict carrier
+(a JSON file under the store, or the ``LACHESIS_TRACE_CONTEXT`` env var
+for spawned subprocesses), and the receiving process runs under
+``tracer.attach(ctx)`` exactly as a worker thread would.  Because
+``perf_counter`` has a per-process epoch, each context also carries a
+wall-clock capture stamp (``captured_unix``) and each process's span
+spill records a (perf, unix) anchor pair — the merge step in
+:mod:`repro.obs.export` rebases every process onto the shared wall
+clock and draws the handoff as a cross-process flow arrow.
 """
 
 from __future__ import annotations
 
 import itertools
+import json
+import os
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Mapping, Optional
 
-__all__ = ["Span", "TraceContext", "Tracer", "TRACER", "span", "configure",
-           "enable", "disable", "tracing_mode", "finished_spans",
-           "clear_spans"]
+__all__ = ["Span", "TraceContext", "Tracer", "TRACER", "TRACE_ENV_VAR",
+           "span", "configure", "enable", "disable", "tracing_mode",
+           "finished_spans", "open_spans", "clear_spans"]
+
+#: env-var carrier for a wire-format TraceContext (spawned subprocesses)
+TRACE_ENV_VAR = "LACHESIS_TRACE_CONTEXT"
+
+#: wire-format schema version for serialized TraceContexts
+CONTEXT_WIRE_VERSION = 1
 
 _ids = itertools.count(1)            # span ids (atomic under the GIL)
 _trace_ids = itertools.count(1)      # trace ids (one per root span)
@@ -121,12 +141,65 @@ class _SuppressSpan:
 
 @dataclass(frozen=True)
 class TraceContext:
-    """Capturable link target for cross-thread parenting (immutable)."""
+    """Capturable link target for cross-thread (and, serialized, for
+    cross-process) parenting.  Immutable.
+
+    ``captured_at`` is the capturing process's ``perf_counter`` — only
+    meaningful inside that process.  ``captured_unix`` is the wall-clock
+    stamp taken at the same instant, the coordinate the cross-process
+    merge uses; ``process`` names the capturing process so the merged
+    trace can route the flow arrow back to its timeline.
+    """
     trace_id: int
     span_id: int
     tid: int
     thread_name: str
     captured_at: float
+    process: str = ""
+    captured_unix: float = 0.0
+
+    # -- wire format (cross-process carrier) ---------------------------------
+    def to_wire(self) -> Dict[str, Any]:
+        """Serializable dict form (versioned; survives JSON round-trip)."""
+        return {"v": CONTEXT_WIRE_VERSION, "trace_id": self.trace_id,
+                "span_id": self.span_id, "tid": self.tid,
+                "thread_name": self.thread_name, "process": self.process,
+                "captured_unix": self.captured_unix}
+
+    @classmethod
+    def from_wire(cls, wire: Mapping[str, Any]) -> "TraceContext":
+        """Rebuild a context from its wire dict.  Tolerant of *older*
+        wire versions (missing fields default); a *newer* version raises
+        so a mixed-version cluster fails loudly instead of mis-linking."""
+        v = int(wire.get("v", 1))
+        if v > CONTEXT_WIRE_VERSION:
+            raise ValueError(
+                f"trace context wire version {v} is newer than supported "
+                f"{CONTEXT_WIRE_VERSION}")
+        return cls(trace_id=int(wire["trace_id"]),
+                   span_id=int(wire["span_id"]),
+                   tid=int(wire.get("tid", 0)),
+                   thread_name=str(wire.get("thread_name", "")),
+                   captured_at=0.0,
+                   process=str(wire.get("process", "")),
+                   captured_unix=float(wire.get("captured_unix", 0.0)))
+
+    def to_env(self) -> Dict[str, str]:
+        """Env-var carrier: merge into a child process's environment."""
+        return {TRACE_ENV_VAR: json.dumps(self.to_wire())}
+
+    @classmethod
+    def from_env(cls, environ: Optional[Mapping[str, str]] = None
+                 ) -> Optional["TraceContext"]:
+        """Read the env-var carrier (None when absent or unparseable)."""
+        raw = (environ if environ is not None else os.environ).get(
+            TRACE_ENV_VAR)
+        if not raw:
+            return None
+        try:
+            return cls.from_wire(json.loads(raw))
+        except (ValueError, KeyError, TypeError):
+            return None
 
 
 class _Local(threading.local):
@@ -142,9 +215,11 @@ class Tracer:
     def __init__(self, buffer: int = 65536):
         self.mode = "off"
         self.sample_every = 16
+        self.process = f"pid-{os.getpid()}"    # label for cross-process merge
         self._buffer = int(buffer)
         self._spans: List[Span] = []
-        self._lock = threading.Lock()          # guards the ring buffer
+        self._open: Dict[int, Span] = {}       # span_id → in-flight span
+        self._lock = threading.Lock()          # guards ring buffer + _open
         self._local = _Local()
         self._sample_clock = itertools.count()
         self.dropped = 0                       # spans evicted from the ring
@@ -156,7 +231,8 @@ class Tracer:
 
     def configure(self, mode: Optional[str] = None,
                   buffer: Optional[int] = None,
-                  sample_every: Optional[int] = None) -> "Tracer":
+                  sample_every: Optional[int] = None,
+                  process: Optional[str] = None) -> "Tracer":
         global _OFF
         if mode is not None:
             if mode not in ("off", "sampled", "full"):
@@ -173,6 +249,10 @@ class Tracer:
             if sample_every < 1:
                 raise ValueError("sample_every must be >= 1")
             self.sample_every = int(sample_every)
+        if process is not None:
+            if not process:
+                raise ValueError("process label must be non-empty")
+            self.process = str(process)
         _OFF = self.mode == "off"
         return self
 
@@ -207,6 +287,8 @@ class Tracer:
                   tid=t.ident or 0, thread_name=t.name,
                   t0=time.perf_counter(), args=dict(args), flow_from=flow)
         local.stack.append(sp)
+        with self._lock:
+            self._open[sp.span_id] = sp
         return sp
 
     def _finish(self, sp: Span) -> None:
@@ -218,6 +300,7 @@ class Tracer:
         elif sp in stack:                      # mismatched exits — recover
             stack.remove(sp)
         with self._lock:
+            self._open.pop(sp.span_id, None)
             self._spans.append(sp)
             self._evict()
 
@@ -242,7 +325,9 @@ class Tracer:
             t = threading.current_thread()
             return TraceContext(trace_id=sp.trace_id, span_id=sp.span_id,
                                 tid=t.ident or 0, thread_name=t.name,
-                                captured_at=time.perf_counter())
+                                captured_at=time.perf_counter(),
+                                process=self.process,
+                                captured_unix=time.time())
         return local.attached
 
     def attach(self, ctx: Optional[TraceContext]):
@@ -257,16 +342,34 @@ class Tracer:
         with self._lock:
             return list(self._spans)
 
+    def open(self) -> List[Span]:
+        """Snapshot of currently in-flight spans (any thread).  A crash
+        dump of these is what lets an aborted process's last span survive
+        into the merged trace (DESIGN §15)."""
+        with self._lock:
+            return list(self._open.values())
+
+    def anchor(self) -> Dict[str, Any]:
+        """A (perf_counter, wall-clock) pair stamped at the same instant —
+        the coordinate transform the cross-process merge needs to rebase
+        this process's spans onto the shared wall clock."""
+        return {"process": self.process, "pid": os.getpid(),
+                "anchor_perf": time.perf_counter(),
+                "anchor_unix": time.time()}
+
     def clear(self) -> None:
         with self._lock:
             self._spans.clear()
+            self._open.clear()
             self.dropped = 0
 
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             n = len(self._spans)
-        return {"mode": self.mode, "buffered": n, "dropped": self.dropped,
-                "buffer": self._buffer, "sample_every": self.sample_every}
+            n_open = len(self._open)
+        return {"mode": self.mode, "buffered": n, "open": n_open,
+                "dropped": self.dropped, "buffer": self._buffer,
+                "sample_every": self.sample_every, "process": self.process}
 
 
 class _Attach:
@@ -316,6 +419,10 @@ def tracing_mode() -> str:
 
 def finished_spans() -> List[Span]:
     return TRACER.finished()
+
+
+def open_spans() -> List[Span]:
+    return TRACER.open()
 
 
 def clear_spans() -> None:

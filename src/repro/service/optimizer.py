@@ -477,6 +477,10 @@ class StorageOptimizer:
         # one O(records²) skeleton build per tick, shared by every dataset's
         # enumeration and what-if score
         groups, _ = self.history.skeleton_graph()
+        # watchdog phase (DESIGN §15): regression alerts from the durable
+        # telemetry become explained why-records through the same path
+        # ClusterHealth signals take
+        self._consider_watchdog(report)
         # cluster phase first: a queued rebalance applies before any
         # per-dataset swap, so those swaps persist against the new placement
         if self._cluster_enabled():
@@ -626,10 +630,56 @@ class StorageOptimizer:
         if self.cfg.max_history_records is not None:
             report.compacted = self.history.compact(
                 self.cfg.max_history_records)
+        self._record_tick_telemetry(report, now)
         self.reports.append(report)
         tsp.set(tick=self._tick_no, considered=len(report.considered),
                 applied=len(report.applied))
         return report
+
+    def _consider_watchdog(self, report: TickReport) -> None:
+        """Run the telemetry regression watchdog (DESIGN §15) and turn
+        each deduped ``perf_regression`` signal into an explained
+        why-record.  Alerts are observations, not actions — nothing
+        queues for apply, but every alert leaves an audit trail in
+        ``decisions.log`` with the observed/baseline/tolerance math."""
+        wd = getattr(self.store, "watchdog", None)
+        if wd is None:
+            return
+        try:
+            wd.check(step=self._tick_no)
+            sigs = wd.signals()
+        except Exception:   # noqa: BLE001 — the watchdog must never take
+            return          # down the optimizer loop it watches
+        for sig in sigs:
+            det = dict(sig.detail)
+            gates = [self._gate(
+                "tolerance_exceeded", True,
+                series=str(det.get("series", sig.node)),
+                observed=det.get("observed", 0.0),
+                baseline=det.get("baseline", 0.0),
+                ratio=det.get("ratio", 0.0),
+                tolerance=det.get("tolerance", 0.0))]
+            self._why(report, "*", f"watchdog:{sig.kind}", sig.node,
+                      None, gates, True)
+
+    def _record_tick_telemetry(self, report: TickReport,
+                               now: float) -> None:
+        """Append one per-tick snapshot to the durable telemetry so the
+        decision cadence survives next to the run profiles it acted on."""
+        tele = getattr(self.store, "telemetry", None)
+        if tele is None:
+            return
+        try:
+            tele.record_tick({
+                "tick": self._tick_no, "now": float(now),
+                "considered": len(report.considered),
+                "applied": [{"dataset": a.dataset, "kind": a.kind,
+                             "generation": int(a.generation),
+                             "moved_bytes": int(a.moved_bytes)}
+                            for a in report.applied],
+                "why_count": len(report.why)})
+        except OSError:      # advisory — never fail the tick
+            pass
 
     # -- durable-store integration (DESIGN §10) ------------------------------
     def _feed_io_calibration(self, io_before) -> float:

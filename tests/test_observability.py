@@ -299,7 +299,9 @@ def test_snapshot_versioned_and_validated():
 def test_chrome_trace_golden_shape():
     """Hand-built spans → the exact event list the exporter must emit:
     thread metadata first, X events rebased to t=0 in µs, args carrying
-    span/parent/trace ids, and an s/f flow pair for the handoff."""
+    span/parent/trace ids, an s/f flow pair for the handoff, and the
+    unfinished span as an explicit ``incomplete`` event whose duration
+    runs to the latest known timestamp (deterministic "now")."""
     root = Span(name="root", cat="t", span_id=7, parent_id=None, trace_id=3,
                 tid=10, thread_name="MainThread", t0=100.0, t1=100.005,
                 args={"k": "v"})
@@ -310,7 +312,7 @@ def test_chrome_trace_golden_shape():
                  args={}, flow_from=ctx)
     open_span = Span(name="open", cat="t", span_id=9, parent_id=None,
                      trace_id=4, tid=10, thread_name="MainThread",
-                     t0=100.001, t1=None)   # unfinished: must be dropped
+                     t0=100.001, t1=None)   # unfinished: exported as-is
     doc = to_chrome_trace([child, root, open_span], metadata={"who": "test"})
     assert doc["traceEvents"] == [
         {"ph": "M", "name": "thread_name", "pid": 1, "tid": 10,
@@ -320,6 +322,10 @@ def test_chrome_trace_golden_shape():
         {"ph": "X", "name": "root", "cat": "t", "pid": 1, "tid": 10,
          "ts": 0.0, "dur": 5000.0,
          "args": {"k": "v", "span_id": 7, "trace_id": 3}},
+        # open span: duration-so-far up to max(t1)=100.005, flagged
+        {"ph": "X", "name": "open", "cat": "t", "pid": 1, "tid": 10,
+         "ts": 1000.0, "dur": 4000.0,
+         "args": {"span_id": 9, "trace_id": 4, "incomplete": True}},
         {"ph": "X", "name": "child", "cat": "t", "pid": 1, "tid": 20,
          "ts": 2000.0, "dur": 2000.0,
          "args": {"span_id": 8, "parent_id": 7, "trace_id": 3}},
@@ -329,8 +335,12 @@ def test_chrome_trace_golden_shape():
          "tid": 20, "ts": 2000.0, "bp": "e"},
     ]
     assert doc["displayTimeUnit"] == "ms"
-    assert doc["otherData"]["spans"] == 2
+    assert doc["otherData"]["spans"] == 3
+    assert doc["otherData"]["incomplete"] == 1
     assert doc["otherData"]["who"] == "test"
+    # include_open=False restores the finished-only view
+    doc2 = to_chrome_trace([child, root, open_span], include_open=False)
+    assert doc2["otherData"]["spans"] == 2
     json.dumps(doc)
 
 

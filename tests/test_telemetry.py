@@ -1,0 +1,491 @@
+"""Cluster-wide observability tests (DESIGN §15): cross-process trace
+stitching, the durable telemetry history, cluster metrics aggregation,
+and the regression watchdog's signal path into the Autopilot.
+
+The cross-process pieces are exercised in-process with separate
+:class:`Tracer` instances standing in for separate interpreters — the
+real three-interpreter path runs in ``scripts/cluster_smoke.py`` (wired
+into verify.sh and CI), which machine-checks the same invariants on the
+stitched artifact.
+"""
+
+import gc
+import json
+import math
+import os
+
+import pytest
+
+from repro import obs
+from repro.api import Session
+from repro.cluster import ClusterConfig, RebalanceAborted
+from repro.core import Workload
+from repro.data.partition_store import PartitionStore
+from repro.obs.export import (load_spill, merge_process_traces, spill_spans)
+from repro.obs.metrics import (MetricsRegistry, merge_node_snapshots,
+                               parse_prometheus_text,
+                               snapshot_prometheus_text)
+from repro.obs.telemetry import (RunProfile, TELEMETRY_SCHEMA_VERSION,
+                                 TelemetryStore)
+from repro.obs.tracer import TRACE_ENV_VAR, TraceContext, Tracer
+from repro.obs.watchdog import RegressionDetector
+from repro.service import AutopilotConfig, LogicalClock, drift_tables
+
+from test_observability import _seed_session, _tracer_reset  # noqa: F401
+
+
+def _query(scan="lineitem", key="orderkey") -> Workload:
+    wl = Workload("telemetry-q")
+    t = wl.scan(scan)
+    p = wl.partition(t[key])
+    wl.aggregate(p, reducer="sum")
+    return wl
+
+
+# ---------------------------------------------------------------------------
+# TraceContext wire format
+# ---------------------------------------------------------------------------
+
+def test_trace_context_wire_roundtrip_and_env_carrier(monkeypatch):
+    ctx = TraceContext(trace_id=7, span_id=42, tid=5, thread_name="main",
+                       captured_at=123.0, process="alpha",
+                       captured_unix=1.7e9)
+    wire = ctx.to_wire()
+    back = TraceContext.from_wire(wire)
+    assert (back.trace_id, back.span_id, back.process) == (7, 42, "alpha")
+    assert back.captured_unix == pytest.approx(1.7e9)
+    # perf_counter stamps are process-local: they never cross the wire
+    assert back.captured_at == 0.0 and "captured_at" not in wire
+
+    # env carrier: what one process exports, a child process parses
+    monkeypatch.setenv(TRACE_ENV_VAR, ctx.to_env()[TRACE_ENV_VAR])
+    got = TraceContext.from_env()
+    assert got is not None and got.span_id == 42 and got.process == "alpha"
+
+    monkeypatch.setenv(TRACE_ENV_VAR, "{not json")
+    assert TraceContext.from_env() is None
+    monkeypatch.delenv(TRACE_ENV_VAR)
+    assert TraceContext.from_env() is None
+
+    # a record from an older build (missing new fields) still loads...
+    old = {"v": 1, "trace_id": 1, "span_id": 2, "tid": 0,
+           "thread_name": "t"}
+    assert TraceContext.from_wire(old).process == ""
+    # ...a record from a future build refuses loudly
+    with pytest.raises(ValueError, match="version"):
+        TraceContext.from_wire(dict(wire, v=99))
+
+
+# ---------------------------------------------------------------------------
+# TelemetryStore: durable, bounded, tolerant
+# ---------------------------------------------------------------------------
+
+def test_run_profile_record_roundtrip_tolerates_unknown_fields():
+    p = RunProfile(t=1.0, workload="w", wall_s=2.5, plan_cache_hit=True,
+                   placement_epoch=3, generations={"events": 2})
+    rec = p.to_record()
+    rec["from_the_future"] = "ignored"
+    back = RunProfile.from_record(rec)
+    assert back == p
+
+
+def test_telemetry_store_appends_reads_and_tolerates_garbage(tmp_path):
+    tele = TelemetryStore(str(tmp_path))
+    tele.record_run(RunProfile(t=1.0, workload="a", wall_s=0.5))
+    tele.record_tick({"tick": 1, "considered": 0})
+    tele.record_run(RunProfile(t=2.0, workload="b", wall_s=0.7))
+    with open(tele.path, "a") as f:
+        f.write(json.dumps({"v": TELEMETRY_SCHEMA_VERSION + 1,
+                            "kind": "run", "workload": "future"}) + "\n")
+        f.write('{"torn')                     # crash mid-append
+
+    with pytest.warns(UserWarning, match="version"):
+        profiles = tele.run_profiles()
+    assert [p.workload for p in profiles] == ["a", "b"]
+    assert len(tele.records(kind="tick")) == 1
+    assert tele.run_profiles(limit=1)[0].workload == "b"
+    # seq increases monotonically across kinds
+    seqs = [r["seq"] for r in tele.records()
+            if r.get("kind") in ("run", "tick")]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+
+
+def test_telemetry_compaction_bounds_the_file(tmp_path):
+    tele = TelemetryStore(str(tmp_path), max_records=10, compact_slack=5)
+    for i in range(40):
+        tele.record_run(RunProfile(t=float(i), workload=f"w{i}",
+                                   wall_s=1.0, retraces=1,
+                                   plan_cache_hit=(i % 2 == 0)))
+    assert tele.compactions >= 1
+    # bounded: at most max_records + slack live records + the summary
+    with open(tele.path) as f:
+        n_lines = sum(1 for _ in f)
+    assert n_lines <= 10 + 5 + 1
+    # nothing is lost: evicted runs folded into the aggregate
+    summ = tele.summary()
+    kept = tele.run_profiles()
+    assert summ["runs"] + len(kept) == 40
+    assert summ["wall_s_sum"] == pytest.approx(float(summ["runs"]))
+    assert summ["retraces"] == summ["runs"]
+    assert summ["first_t"] == 0.0
+    # the newest records survive verbatim, oldest-first
+    assert kept[-1].workload == "w39"
+    # a fresh handle over the compacted file sees the same state
+    tele2 = TelemetryStore(str(tmp_path), max_records=10)
+    assert tele2.summary()["runs"] == summ["runs"]
+    assert [p.workload for p in tele2.run_profiles()] == \
+        [p.workload for p in kept]
+
+
+def test_session_records_run_profiles_and_survives_restart(tmp_path):
+    root = tmp_path / "s"
+    sess = _seed_session(root, n=800)
+    wl = _query()
+    sess.run(wl)
+    sess.run(wl)
+    profiles = sess.telemetry()
+    assert len(profiles) == 2
+    cold, warm = profiles
+    assert cold.workload == warm.workload == "telemetry-q"
+    assert not cold.plan_cache_hit and warm.plan_cache_hit
+    assert warm.retraces == 0                 # cache hit ⇒ no new traces
+    assert warm.wall_s > 0 and warm.valid_bytes > 0
+    assert "lineitem" in warm.generations     # the plan's generation pins
+
+    # a FRESH session over the same root reads the history and appends
+    sess2 = Session(PartitionStore(num_workers=4, backend="host",
+                                   root=str(root)))
+    assert len(sess2.telemetry()) == 2
+    sess2.run(_query())
+    assert len(sess2.telemetry()) == 3
+    assert sess2.telemetry(limit=1)[0].plan_cache_hit is not None
+
+    # memory-only stores have no telemetry and say so cheaply
+    mem = Session(PartitionStore(num_workers=4, backend="host"))
+    assert mem.telemetry() == [] and mem.telemetry_store is None
+
+
+# ---------------------------------------------------------------------------
+# regression watchdog
+# ---------------------------------------------------------------------------
+
+def _fill(tele, n, wall, t0=0.0, retraces=0, padded=100, valid=100):
+    for i in range(n):
+        tele.record_run(RunProfile(t=t0 + i, workload="w", wall_s=wall,
+                                   retraces=retraces, padded_bytes=padded,
+                                   valid_bytes=valid))
+
+
+def test_watchdog_baseline_regression_dedupe_and_rearm(tmp_path):
+    tele = TelemetryStore(str(tmp_path))
+    wd = RegressionDetector(tele, window=8, tolerance=1.5, min_runs=4)
+    # no baseline yet → check is a no-op
+    _fill(tele, 8, wall=1.0)
+    assert wd.check() == []
+    base = wd.record_baseline()
+    assert base["stats"]["run_wall_p50_s"] == pytest.approx(1.0)
+    assert os.path.exists(wd.baseline_path)
+
+    # within tolerance: quiet
+    _fill(tele, 8, wall=1.2, t0=100)
+    assert wd.check(step=1) == []
+
+    # regression: exactly one signal per excursion, however many checks
+    _fill(tele, 8, wall=2.0, t0=200)
+    (sig,) = wd.check(step=2)
+    assert sig.kind == "perf_regression" and sig.node == "run_wall_p50_s"
+    assert sig.detail["ratio"] == pytest.approx(2.0)
+    assert sig.detail["baseline"] == pytest.approx(1.0)
+    assert wd.check(step=3) == []             # deduped while still bad
+    assert [s.step for s in wd.signals()] == [2]
+    assert wd.signals() == []                 # drain-once protocol
+
+    # recovery re-arms the series: the next excursion signals again
+    _fill(tele, 8, wall=1.0, t0=300)
+    assert wd.check(step=4) == []
+    _fill(tele, 8, wall=3.0, t0=400)
+    (sig2,) = wd.check(step=5)
+    assert sig2.detail["ratio"] == pytest.approx(3.0)
+    assert wd.raised_total == 2
+
+    # lower-is-worse series: a coalesce-rate COLLAPSE alerts
+    reg = MetricsRegistry()
+    c = reg.counter("serving_completed")
+    k = reg.counter("serving_coalesced")
+    c.inc(100), k.inc(80)
+    wd2 = RegressionDetector(tele, window=8, tolerance=1.5, min_runs=4,
+                             registry=reg)
+    wd2.record_baseline()
+    c.inc(900)                                # rate 80/1000 << 80/100
+    names = {s.node for s in wd2.check()}
+    assert "coalesce_rate" in names
+
+
+def test_watchdog_alerts_become_autopilot_why_records(tmp_path):
+    sess = _seed_session(tmp_path / "s", n=800)
+    wl = _query()
+    for _ in range(4):
+        sess.run(wl)
+    wd = sess.watchdog
+    wd.min_runs = 4
+    wd.record_baseline()
+    # a sustained 10x wall regression, injected as telemetry history
+    _fill(sess.telemetry_store, 32,
+          wall=sess.telemetry()[0].wall_s * 10, t0=1e9)
+
+    ap = sess.autopilot(clock=LogicalClock(), config=AutopilotConfig())
+    rep = ap.tick()
+    alerts = [w for w in rep.why
+              if w["action"] == "watchdog:perf_regression"]
+    assert alerts, "watchdog alert did not reach the tick's why-records"
+    w = alerts[0]
+    assert w["candidate"] == "run_wall_p50_s" and w["accepted"]
+    (g,) = w["gates"]
+    assert g["gate"] == "tolerance_exceeded" and g["passed"]
+    assert g["ratio"] > g["tolerance"] > 1.0
+    # the alert is explainable after the fact, like any other decision
+    assert any(r["action"] == "watchdog:perf_regression"
+               for r in sess.explain_decisions())
+    # and the tick itself landed in the durable telemetry
+    ticks = sess.telemetry_store.records(kind="tick")
+    assert ticks and ticks[-1]["why_count"] == len(rep.why)
+
+
+# ---------------------------------------------------------------------------
+# cross-process trace stitching (two in-process "processes")
+# ---------------------------------------------------------------------------
+
+def test_spill_merge_stitches_two_processes(tmp_path):
+    d = str(tmp_path / "tele")
+    # "process" alpha: a finished root span whose context crosses the wire
+    a = Tracer().configure(mode="full", process="alpha")
+    with a.span("alpha.root", "smoke", phase=1):
+        wire = a.context().to_wire()
+    spill_spans(d, tracer=a)
+
+    # "process" beta: attaches to alpha's wire context, then dies with a
+    # span still open — spilled mid-flight, like a crash handler would
+    b = Tracer().configure(mode="full", process="beta")
+    with b.attach(TraceContext.from_wire(wire)):
+        with b.span("beta.root", "smoke"):
+            open_sp = b.span("beta.dies_inside", "smoke")
+            open_sp.__enter__()
+            spill_spans(d, tracer=b)
+
+    loaded = load_spill(os.path.join(d, "trace-alpha.jsonl"))
+    assert loaded["header"]["process"] == "alpha"
+    assert loaded["header"]["mode"] == "full"
+
+    doc = merge_process_traces(d)
+    other = doc["otherData"]
+    assert set(other["processes"]) == {"alpha", "beta"}
+    pid_a, pid_b = (other["processes"][p] for p in ("alpha", "beta"))
+    assert pid_a != pid_b
+
+    events = doc["traceEvents"]
+    names = {e["args"]["name"] for e in events
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert names == {"alpha", "beta"}
+
+    xs = [e for e in events if e["ph"] == "X"]
+    assert {e["pid"] for e in xs} == {pid_a, pid_b}
+    # the open span survived, flagged, with a non-negative duration
+    (dying,) = [e for e in xs if e["name"] == "beta.dies_inside"]
+    assert dying["args"]["incomplete"] is True and dying["dur"] >= 0
+    # beta.root was ALSO still on the stack at spill time
+    (broot,) = [e for e in xs if e["name"] == "beta.root"]
+    assert broot["args"]["incomplete"] is True
+    assert other["incomplete"] == 2
+
+    # process-qualified ids: beta's root parents onto ALPHA's span
+    (aroot,) = [e for e in xs if e["name"] == "alpha.root"]
+    assert aroot["args"]["span_uid"].startswith("alpha/")
+    assert broot["args"]["parent_uid"] == aroot["args"]["span_uid"]
+
+    # one cross-process flow arrow, s on alpha's pid, f on beta's
+    (s,) = [e for e in events if e["ph"] == "s" and e["name"] == "xproc"]
+    (fl,) = [e for e in events if e["ph"] == "f" and e["name"] == "xproc"]
+    assert s["id"] == fl["id"]
+    assert s["pid"] == pid_a and fl["pid"] == pid_b
+    assert other["cross_process_flows"] == 1
+    # merged timestamps are rebased: everything is near-zero, not 1e15
+    assert all(0 <= e["ts"] < 60e6 for e in xs)
+
+    open_sp.__exit__(None, None, None)
+
+
+def test_spill_skips_future_version_files(tmp_path):
+    d = str(tmp_path)
+    a = Tracer().configure(mode="full", process="ok")
+    with a.span("fine"):
+        pass
+    spill_spans(d, tracer=a)
+    with open(os.path.join(d, "trace-future.jsonl"), "w") as f:
+        f.write(json.dumps({"kind": "header", "version": 99,
+                            "process": "future", "anchor_perf": 0,
+                            "anchor_unix": 0}) + "\n")
+    with pytest.warns(UserWarning, match="version"):
+        doc = merge_process_traces(d)
+    assert set(doc["otherData"]["processes"]) == {"ok"}
+    assert doc["otherData"]["skipped_files"] == 1
+
+
+def test_killed_rebalance_leaves_incomplete_span(tmp_path):
+    """Satellite regression test: a rebalance killed mid-stream must
+    leave an open ``cluster.rebalance`` span in the crash spill, and the
+    merged trace must flag it ``incomplete``."""
+    obs.enable("full", process="crash")
+    root = str(tmp_path / "c")
+    sess = Session(store_path=root, num_workers=4,
+                   cluster=ClusterConfig(nodes=("n0", "n1"), replication=2))
+    tele = sess.telemetry_store
+    for name, data in drift_tables(n_lineitem=600, n_orders=200,
+                                   n_parts=80).items():
+        sess.write(name, data)
+    plan = sess.plan_rebalance(add_nodes=("n2",), reason="test-kill")
+    with pytest.raises(RebalanceAborted):
+        sess.rebalance(plan=plan, abort_after=1,
+                       on_abort=lambda: spill_spans(tele.dir))
+    doc = merge_process_traces(tele.dir)
+    reb = [e for e in doc["traceEvents"]
+           if e["ph"] == "X" and e["name"] == "cluster.rebalance"]
+    assert reb and reb[0]["args"]["incomplete"] is True
+    assert reb[0]["args"]["process"] == "crash"
+    # after the abort unwound, the live tracer's span DID close — only
+    # the crash-point spill preserves the in-flight view
+    live = [sp for sp in obs.finished_spans()
+            if sp.name == "cluster.rebalance"]
+    assert live and live[0].t1 is not None
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text: strict round-trip + node-labeled cluster merge
+# ---------------------------------------------------------------------------
+
+def _every_kind_registry() -> MetricsRegistry:
+    reg = MetricsRegistry()
+    c = reg.counter("requests_total", help="reqs",
+                    labels={"path": 'a\\b"c\nd'})    # every escape at once
+    c.inc(3)
+    reg.counter("requests_total", labels={"path": "plain"}).inc(2)
+    reg.gauge("queue_depth").set(7.5)
+    h = reg.histogram("latency_s", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 5.0, 50.0):
+        h.observe(v)
+    return reg
+
+
+def test_prometheus_text_strict_roundtrip():
+    reg = _every_kind_registry()
+    text = snapshot_prometheus_text(reg.snapshot())
+    parsed = parse_prometheus_text(text)      # raises on any violation
+
+    assert parsed["types"]["requests_total"] == "counter"
+    assert parsed["types"]["queue_depth"] == "gauge"
+    assert parsed["types"]["latency_s"] == "histogram"
+
+    by = {(n, tuple(sorted(lab.items()))): v
+          for n, lab, v in parsed["samples"]}
+    # escaped label values survive the round-trip byte-for-byte
+    assert by[("requests_total",
+               (("path", 'a\\b"c\nd'),))] == 3.0
+    assert by[("queue_depth", ())] == 7.5
+    assert by[("latency_s_count", ())] == 4.0
+    assert by[("latency_s_bucket", (("le", "+Inf"),))] == 4.0
+
+    # le buckets appear ascending with +Inf last (the parser enforces
+    # it — assert the order directly too, since the JSON snapshot sorts
+    # lexicographically, which would scramble "+Inf" before "0.1")
+    les = [lab["le"] for n, lab, _v in parsed["samples"]
+           if n == "latency_s_bucket"]
+    assert les == ["0.1", "1", "10", "+Inf"]
+
+    # strictness: duplicates, bad escapes, unordered buckets all raise
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_prometheus_text("# TYPE a counter\na 1\na 2\n")
+    with pytest.raises(ValueError, match="escape"):
+        parse_prometheus_text('# TYPE a counter\na{l="\\x"} 1\n')
+    with pytest.raises(ValueError, match="TYPE"):
+        parse_prometheus_text("orphan_sample 1\n")
+    with pytest.raises(ValueError):
+        parse_prometheus_text('# TYPE h histogram\n'
+                              'h_bucket{le="1"} 5\n'
+                              'h_bucket{le="+Inf"} 3\n'   # not cumulative
+                              'h_sum 1\nh_count 3\n')
+
+
+def test_cluster_metrics_merge_adds_node_labels(tmp_path):
+    tele = TelemetryStore(str(tmp_path))
+    for node in ("node-a", "node-b"):
+        reg = _every_kind_registry()
+        reg.counter("node_specific_total", labels={"node_role": node}).inc()
+        tele.write_node_metrics(reg, node)
+
+    merged = tele.cluster_metrics()
+    assert sorted(merged["nodes"]) == ["node-a", "node-b"]
+    # every sample in the merged view carries its node label
+    for series in merged["metrics"].values():
+        for s in series["samples"]:
+            assert s["labels"]["node"] in ("node-a", "node-b")
+
+    text = tele.cluster_metrics_text()
+    parsed = parse_prometheus_text(text)      # merged view stays strict
+    nodes = {lab["node"] for _n, lab, _v in parsed["samples"]}
+    assert nodes == {"node-a", "node-b"}
+    # per-node histograms keep distinct, well-ordered bucket families
+    inf = [v for n, lab, v in parsed["samples"]
+           if n == "latency_s_bucket" and lab["le"] == "+Inf"]
+    assert inf == [4.0, 4.0]
+
+    # a snapshot from a future build is skipped, not merged wrongly
+    doc = merge_node_snapshots({"old": _every_kind_registry().snapshot(),
+                                "new": {"version": 99, "metrics": {}}})
+    assert doc["nodes"] == ["old"] and doc["skipped_nodes"] == ["new"]
+
+
+def test_tracer_health_metrics_in_session_snapshot(tmp_path):
+    gc.collect()        # sessions share the process registry: drop the
+    obs.enable("full")  # weakref'd collectors of earlier tests' stores
+    sess = _seed_session(tmp_path / "s", n=600)
+    sess.run(_query())
+    snap = sess.metrics()["metrics"]
+    modes = {s["labels"]["mode"]: s["value"]
+             for s in snap["trace_mode"]["samples"]}
+    assert modes == {"full": 2.0}
+    assert snap["trace_spans_dropped_total"]["samples"][0]["value"] == 0.0
+    # durable telemetry + watchdog surface their own health counters
+    assert snap["telemetry_records"]["samples"][0]["value"] >= 1.0
+    assert snap["watchdog_checks_total"]["samples"][0]["value"] >= 0.0
+
+    obs.configure(mode="sampled", buffer=4)
+    for i in range(12):
+        with obs.span(f"overflow{i}"):
+            pass
+    snap2 = sess.metrics()["metrics"]
+    assert snap2["trace_spans_dropped_total"]["samples"][0]["value"] > 0
+    modes2 = {s["labels"]["mode"]: s["value"]
+              for s in snap2["trace_mode"]["samples"]}
+    assert modes2 == {"sampled": 1.0}
+
+
+def test_session_cluster_metrics_views(tmp_path):
+    gc.collect()        # see test_tracer_health_metrics_in_session_snapshot
+    sess = _seed_session(tmp_path / "s", n=600)
+    assert sess.export_node_metrics("me") is not None
+    merged = sess.cluster_metrics()
+    assert merged["nodes"] == ["me"]
+    parse_prometheus_text(sess.cluster_metrics_text())
+    # memory-only sessions degrade to an empty view, not an error
+    mem = Session(PartitionStore(num_workers=4, backend="host"))
+    assert mem.cluster_metrics()["nodes"] == []
+    assert mem.export_node_metrics() is None
+
+
+def test_merged_trace_is_pure_json(tmp_path):
+    a = Tracer().configure(mode="full", process="p")
+    with a.span("s", weird=object()):         # non-JSON arg → repr'd
+        pass
+    spill_spans(str(tmp_path), tracer=a)
+    doc = merge_process_traces(str(tmp_path))
+    text = json.dumps(doc)                    # must not raise
+    assert math.isfinite(len(text))
